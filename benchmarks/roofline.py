@@ -1,0 +1,76 @@
+"""§Roofline harness: aggregate the dry-run JSON records into the table.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+prints the per-(arch × shape × mesh) roofline terms, bottleneck, useful
+ratio, and fit flag.  ``python -m benchmarks.roofline [--markdown]``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(path: str = DRYRUN_DIR):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(recs):
+    out = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            out.append({"cell": f"{r['arch']} × {r['shape']} × {r['mesh']}",
+                        "status": "skipped", "why": r.get("reason", "")})
+            continue
+        rl = r["roofline"]
+        out.append({
+            "cell": f"{r['arch']} × {r['shape']} × {r['mesh']}",
+            "status": "ok",
+            "profile": r.get("profile", "?"),
+            "t_compute_ms": rl["t_compute"] * 1e3,
+            "t_memory_ms": rl["t_memory"] * 1e3,
+            "t_collective_ms": rl["t_collective"] * 1e3,
+            "bottleneck": rl["bottleneck"],
+            "useful": rl["useful_ratio"],
+            "roofline_frac": rl.get("roofline_fraction", 0.0),
+            "peak_gb": r["memory"]["peak_bytes"] / 1e9,
+            "fits_16g": r.get("fits_16g"),
+            "collectives": rl.get("collectives", ""),
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    args = ap.parse_args()
+    rs = rows(load_records(args.dir))
+    if args.markdown:
+        print("| cell | prof | compute ms | memory ms | coll ms | bottleneck "
+              "| useful | roofline | peak GB | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rs:
+            if r["status"] == "skipped":
+                print(f"| {r['cell']} | — | — | — | — | skipped: {r['why'][:40]}"
+                      " | — | — | — | — |")
+            else:
+                print(f"| {r['cell']} | {r['profile']} | {r['t_compute_ms']:.0f} "
+                      f"| {r['t_memory_ms']:.0f} | {r['t_collective_ms']:.0f} "
+                      f"| {r['bottleneck']} | {r['useful']:.2f} "
+                      f"| {r['roofline_frac']:.3f} | {r['peak_gb']:.2f} "
+                      f"| {'Y' if r['fits_16g'] else 'N'} |")
+    else:
+        for r in rs:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: ReLeQ end-to-end on the paper's LeNet in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. pretrain LeNet (synthetic-learnable MNIST stand-in, DESIGN.md §3),
+2. run the PPO agent over per-layer bitwidths (paper Fig 4 loop),
+3. long-retrain at the found policy and report accuracy loss + the
+   hardware speedups the paper's cost models predict.
+"""
+import numpy as np
+
+from repro.cnn import CNNTask
+from repro.core import costmodel as cm
+from repro.core.search import ReLeQSearch
+
+
+def main():
+    print("== pretraining LeNet (fp32) ==")
+    task = CNNTask("lenet", seed=0)
+    fp_acc = task.pretrain(300)
+    print(f"full-precision accuracy: {fp_acc:.3f}")
+
+    print("\n== ReLeQ search (PPO + LSTM agent, per-layer bitwidths) ==")
+    search = ReLeQSearch(task.make_env_factory(retrain_steps=2), seed=0)
+    result = search.run(episodes=30, log_every=10)
+    bits = result.best_bits
+    names = task.names
+    print("bitwidths:", {n: bits[n] for n in names})
+    print(f"average bits: {np.mean([bits[n] for n in names]):.2f}")
+
+    print("\n== long retrain at the found policy (paper's final step) ==")
+    rel = task.long_retrain(bits, steps=150)
+    print(f"relative accuracy after retrain: {rel:.4f} "
+          f"(acc loss {max(0.0, (1 - rel) * 100):.2f}%)")
+
+    vec = [bits[n] for n in names]
+    print("\n== hardware benefit (paper cost models) ==")
+    print(f"Stripes speedup vs 8-bit : {cm.speedup_vs_8bit(cm.stripes_time, vec, task.groups):.2f}x")
+    print(f"Stripes energy reduction : {cm.energy_reduction_vs_8bit(vec, task.groups):.2f}x")
+    print(f"TVM-CPU speedup vs 8-bit : {cm.speedup_vs_8bit(cm.tvm_cpu_time, vec, task.groups):.2f}x")
+    print(f"TPU-v5e decode speedup   : {cm.speedup_vs_8bit(cm.tpu_decode_time, vec, task.groups):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""ReLeQ on a language model: search per-matrix bitwidths for a reduced
+glm4-family decoder, driving the QAT train/eval steps as the environment.
+
+    PYTHONPATH=src python examples/releq_lm_search.py [--episodes 12]
+
+This is the scale-out configuration of DESIGN.md §4 running on one host:
+the environment evaluator = short QAT finetune + likelihood-ratio proxy;
+bitwidths enter the jit'd step as data so every candidate shares one
+executable.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.search import ReLeQSearch, make_lm_env_factory
+from repro.data import SyntheticLMData
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train.train_step import init_state, make_train_step
+from repro.quant.qat import bits_assignment, policy_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--episodes", type=int, default=12)
+    ap.add_argument("--pretrain-steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    data = SyntheticLMData(seed=0, global_batch=8, seq_len=32,
+                           vocab=cfg.vocab_size)
+
+    print(f"== pretraining reduced {args.arch} ==")
+    opt = AdamW(lr=3e-3)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    step = make_train_step(model, opt)
+    bm = {k: jax.numpy.asarray(v) for k, v in bits_assignment(
+        model.quant_groups(), policy_for(model, 8)).items()}
+    for i in range(args.pretrain_steps):
+        state, m = step(state, data.next(), bm)
+    print(f"pretrain loss: {float(m['loss']):.3f}")
+
+    print("\n== ReLeQ search over per-matrix bitwidths ==")
+    factory = make_lm_env_factory(model, state["params"], data,
+                                  finetune_steps=2)
+    search = ReLeQSearch(factory, seed=0)
+    result = search.run(episodes=args.episodes, log_every=4)
+    bits = result.best_bits
+    print(f"\nbest policy (avg {np.mean(list(bits.values())):.2f} bits):")
+    for name, b in list(bits.items())[:12]:
+        print(f"  {name:20s} {b}")
+    if len(bits) > 12:
+        print(f"  ... (+{len(bits) - 12} groups)")
+
+
+if __name__ == "__main__":
+    main()

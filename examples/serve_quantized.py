@@ -1,0 +1,66 @@
+"""Serve a quantized LM: pack ReLeQ bitwidths into bitplanes and decode.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--bits 4]
+
+Shows the serving path end-to-end: train params -> quantize_for_serving
+(per-layer bitplane packing, DESIGN.md §3) -> batched prefill + decode
+loop with the packed weights, reporting packed-vs-bf16 weight bytes (the
+quantity that sets decode latency on TPU).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.pack import Packed
+from repro.quant.qat import policy_for
+from repro.train.serve import make_decode_step, quantize_for_serving
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = policy_for(model, default_bits=args.bits)
+    sparams = quantize_for_serving(model, params, policy)
+
+    bf16_bytes = sum(x.size * 2 for x in jax.tree.leaves(params))
+    packed_bytes = sum(
+        x.planes.size + x.scale.size * 4
+        for x in jax.tree.leaves(sparams, is_leaf=lambda l: isinstance(l, Packed))
+        if isinstance(x, Packed))
+    print(f"weights: bf16 {bf16_bytes/1e6:.2f} MB -> packed "
+          f"{packed_bytes/1e6:.2f} MB at {args.bits} bits "
+          f"(matmul weights only)")
+
+    B = args.batch
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+    logits, cache = model.prefill(sparams, tokens=prompt,
+                                  max_len=8 + args.steps + 1)
+    dec = make_decode_step(model, donate=False)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.steps):
+        logits, cache = dec(sparams, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    dt = (time.time() - t0) / args.steps
+    seqs = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.steps} steps × batch {B} "
+          f"({dt*1e3:.1f} ms/step on CPU ref path)")
+    print("sample token ids:", seqs[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

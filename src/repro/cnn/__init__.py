@@ -1,0 +1,17 @@
+"""Paper-faithful substrate: the CNN benchmark family of Table 2, in JAX.
+
+ImageNet/CIFAR/MNIST/SVHN are not available in this offline container, so
+each network trains on a deterministic synthetic-but-learnable classifier
+dataset with the original input geometry (DESIGN.md §3): networks reach
+high accuracy in seconds on CPU, accuracy degrades monotonically with
+weight bitwidth, and short fine-tuning recovers it — the exact signal the
+ReLeQ environment consumes.  AlexNet / MobileNet / VGG-11 keep their layer
+*structure* with reduced channel widths (CPU budget); LeNet / SimpleNet /
+SVHN-10 / ResNet-20 are full-structure.
+
+Quantization here is per-tensor WRPN (the paper's §4.2 recipe, scale =
+max|w|), unlike the LM path's per-column scales — fidelity first.
+"""
+from repro.cnn.models import CNN_ZOO, build_cnn  # noqa: F401
+from repro.cnn.data import make_dataset  # noqa: F401
+from repro.cnn.train import CNNTask  # noqa: F401

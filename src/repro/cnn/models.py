@@ -1,0 +1,243 @@
+"""The paper's CNN benchmark family as explicit-params JAX functions.
+
+Every model exposes the same protocol as the LMs where it matters to
+ReLeQ: ``init``, ``apply(params, x) -> logits``, ``quant_groups()``.
+Layer list = quantizable weight groups in forward order, matching the
+paper's episode walk.  MACs are computed per-sample from the actual
+conv/fc geometry — the inputs to the State-of-Quantization metric.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import QuantGroup
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kind: str          # conv | dwconv | fc
+    c_in: int
+    c_out: int
+    k: int = 3
+    stride: int = 1
+    residual_from: str | None = None   # resnet shortcuts
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+class CNNModel:
+    """Sequential(+residual) CNN from a list of ConvSpecs."""
+
+    def __init__(self, name: str, specs: list[ConvSpec], input_hw: int,
+                 c_in: int, num_classes: int, frozen_first_last: bool = True):
+        self.name = name
+        self.specs = specs
+        self.input_hw = input_hw
+        self.c_in = c_in
+        self.num_classes = num_classes
+        self.frozen_first_last = frozen_first_last
+        self._plan_shapes()
+
+    def _plan_shapes(self):
+        hw = self.input_hw
+        self._hw_at = {}
+        for s in self.specs:
+            if s.kind == "fc":
+                hw = 1
+            self._hw_at[s.name] = hw
+            if s.kind in ("conv", "dwconv") and s.stride > 1:
+                hw = -(-hw // s.stride)
+        self._hw_out = hw
+
+    def init(self, rng):
+        params = {}
+        hw = self.input_hw
+        flat_in = None
+        for s in self.specs:
+            key = jax.random.fold_in(rng, hash(s.name) % (2 ** 31))
+            if s.kind == "conv":
+                w = jax.random.normal(key, (s.k, s.k, s.c_in, s.c_out), jnp.float32)
+                w *= (2.0 / (s.k * s.k * s.c_in)) ** 0.5
+            elif s.kind == "dwconv":
+                w = jax.random.normal(key, (s.k, s.k, 1, s.c_in), jnp.float32)
+                w *= (2.0 / (s.k * s.k)) ** 0.5
+            else:  # fc
+                n_in = s.c_in if flat_in is None else flat_in
+                w = jax.random.normal(key, (n_in, s.c_out), jnp.float32)
+                w *= (2.0 / n_in) ** 0.5
+            params[s.name] = {"w": w, "b": jnp.zeros((w.shape[-1] if s.kind != "dwconv" else s.c_in,), jnp.float32)}
+            if s.kind in ("conv", "dwconv") and s.stride > 1:
+                hw = -(-hw // s.stride)
+            if s.kind == "fc":
+                flat_in = s.c_out
+        return params
+
+    def apply(self, params, x):
+        """x: (B, H, W, C) -> logits (B, classes)."""
+        taps = {}
+        flat = False
+        for i, s in enumerate(self.specs):
+            p = params[s.name]
+            if s.kind == "fc":
+                if not flat:
+                    x = jnp.mean(x, axis=(1, 2))  # global average pool
+                    flat = True
+                x = x @ p["w"] + p["b"]
+            elif s.kind == "dwconv":
+                x = _conv(x, p["w"], s.stride, groups=s.c_in) + p["b"]
+            else:
+                x = _conv(x, p["w"], s.stride) + p["b"]
+            if s.residual_from is not None and s.residual_from in taps:
+                r = taps[s.residual_from]
+                if r.shape == x.shape:
+                    x = x + r
+            taps[s.name] = x
+            if i < len(self.specs) - 1:
+                x = jax.nn.relu(x)
+        return x
+
+    # ---- quantization interface ----------------------------------------
+    def quant_groups(self, seq_len: int = 0) -> list[QuantGroup]:
+        out = []
+        for s in self.specs:
+            hw = self._hw_at[s.name]
+            if s.kind == "conv":
+                nw = s.k * s.k * s.c_in * s.c_out
+                macs = nw * (hw // s.stride) * (hw // s.stride)
+            elif s.kind == "dwconv":
+                nw = s.k * s.k * s.c_in
+                macs = nw * (hw // s.stride) * (hw // s.stride)
+            else:
+                nw = None  # resolved from params at env build (flatten dim)
+                nw = s.c_in * s.c_out
+                macs = nw
+            out.append(QuantGroup(s.name, (s.name, "w"), None,
+                                  (0,), nw, macs))
+        return out
+
+    def frozen_bits(self) -> dict[str, int]:
+        """Paper keeps boundary layers high-precision (Table 2: first/last 8)."""
+        if not self.frozen_first_last:
+            return {}
+        return {self.specs[0].name: 8, self.specs[-1].name: 8}
+
+
+def lenet() -> CNNModel:
+    # paper LeNet on MNIST: conv1, conv2, fc1, fc2 (Table 2: {2,2,3,2})
+    specs = [
+        ConvSpec("conv1", "conv", 1, 6, k=5, stride=2),
+        ConvSpec("conv2", "conv", 6, 16, k=5, stride=2),
+        ConvSpec("fc1", "fc", 16, 120),
+        ConvSpec("fc2", "fc", 120, 10),
+    ]
+    return CNNModel("lenet", specs, 28, 1, 10, frozen_first_last=False)
+
+
+def simplenet5() -> CNNModel:
+    # paper "CIFAR-10 (SimpleNet, 5 layers)": {5,5,5,5,5}
+    specs = [
+        ConvSpec("conv1", "conv", 3, 32, stride=1),
+        ConvSpec("conv2", "conv", 32, 32, stride=2),
+        ConvSpec("conv3", "conv", 32, 64, stride=2),
+        ConvSpec("conv4", "conv", 64, 64, stride=2),
+        ConvSpec("fc", "fc", 64, 10),
+    ]
+    return CNNModel("simplenet", specs, 32, 3, 10, frozen_first_last=False)
+
+
+def svhn10() -> CNNModel:
+    # paper "SVHN-10 (10 layers)": {8,4,4,4,4,4,4,4,4,8}
+    chans = [32, 32, 48, 48, 64, 64, 80, 80]
+    specs, c = [], 3
+    for i, co in enumerate(chans):
+        specs.append(ConvSpec(f"conv{i+1}", "conv", c, co,
+                              stride=2 if i % 2 == 1 else 1))
+        c = co
+    specs += [ConvSpec("fc1", "fc", c, 128), ConvSpec("fc2", "fc", 128, 10)]
+    return CNNModel("svhn10", specs, 32, 3, 10)
+
+
+def vgg11() -> CNNModel:
+    # VGG-11 structure (8 conv + 3 fc), channels /4 for CPU budget
+    cfg = [(16, 1), (32, 2), (64, 1), (64, 2), (128, 1), (128, 2), (128, 1), (128, 2)]
+    specs, c = [], 3
+    for i, (co, st) in enumerate(cfg):
+        specs.append(ConvSpec(f"conv{i+1}", "conv", c, co, stride=st))
+        c = co
+    specs += [ConvSpec("fc1", "fc", c, 128), ConvSpec("fc2", "fc", 128, 128),
+              ConvSpec("fc3", "fc", 128, 10)]
+    return CNNModel("vgg11", specs, 32, 3, 10)
+
+
+def resnet20() -> CNNModel:
+    # full ResNet-20 structure: stem + 3 stages × 3 blocks × 2 convs + fc
+    specs = [ConvSpec("stem", "conv", 3, 16)]
+    c = 16
+    idx = 0
+    for stage, co in enumerate([16, 32, 64]):
+        for blk in range(3):
+            st = 2 if (stage > 0 and blk == 0) else 1
+            a = f"s{stage}b{blk}a"
+            b = f"s{stage}b{blk}b"
+            prev = specs[-1].name
+            specs.append(ConvSpec(a, "conv", c, co, stride=st))
+            specs.append(ConvSpec(b, "conv", co, co, residual_from=prev))
+            c = co
+            idx += 1
+    specs.append(ConvSpec("fc", "fc", c, 10))
+    return CNNModel("resnet20", specs, 32, 3, 10)
+
+
+def alexnet() -> CNNModel:
+    # AlexNet structure (5 conv + 3 fc), width /8, 32×32 synthetic-imagenet
+    specs = [
+        ConvSpec("conv1", "conv", 3, 12, k=5, stride=2),
+        ConvSpec("conv2", "conv", 12, 32, k=5, stride=2),
+        ConvSpec("conv3", "conv", 32, 48),
+        ConvSpec("conv4", "conv", 48, 48),
+        ConvSpec("conv5", "conv", 48, 32, stride=2),
+        ConvSpec("fc1", "fc", 32, 256),
+        ConvSpec("fc2", "fc", 256, 256),
+        ConvSpec("fc3", "fc", 256, 20),
+    ]
+    return CNNModel("alexnet", specs, 32, 3, 20)
+
+
+def mobilenet_v1() -> CNNModel:
+    # MobileNet-V1 structure: stem + 13 (dw, pw) pairs + fc, width /8.
+    # ReLeQ's Table 2 lists 30 quantizable layers; ours: 1+26+1 = 28 + fc.
+    plan = [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1), (128, 2), (128, 1),
+            (128, 1), (128, 1), (128, 1), (128, 1), (256, 2), (256, 1)]
+    specs = [ConvSpec("stem", "conv", 3, 8, stride=2)]
+    c = 8
+    for i, (co, st) in enumerate(plan):
+        specs.append(ConvSpec(f"dw{i+1}", "dwconv", c, c, stride=st))
+        specs.append(ConvSpec(f"pw{i+1}", "conv", c, co, k=1))
+        c = co
+    specs.append(ConvSpec("fc", "fc", c, 20))
+    return CNNModel("mobilenet", specs, 32, 3, 20)
+
+
+CNN_ZOO = {
+    "lenet": lenet,
+    "simplenet": simplenet5,
+    "svhn10": svhn10,
+    "vgg11": vgg11,
+    "resnet20": resnet20,
+    "alexnet": alexnet,
+    "mobilenet": mobilenet_v1,
+}
+
+
+def build_cnn(name: str) -> CNNModel:
+    return CNN_ZOO[name]()

@@ -1,0 +1,143 @@
+"""CNN training/eval with WRPN QAT + the ReLeQ environment glue.
+
+``CNNTask`` owns one (network, dataset) pair:
+- ``pretrain``: full-precision training to convergence (the paper starts
+  the agent from a pre-trained model),
+- ``evaluate_bits``: the environment's accuracy oracle — short QAT retrain
+  at a candidate bitwidth assignment (paper's "shortened amount of
+  epochs"), then validation accuracy relative to the fp baseline,
+- ``long_retrain``: the paper's final step after the agent converges.
+
+Quantization is per-tensor WRPN with STE (paper §4.2), bits as jit data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cnn.data import DATASET_FOR, make_dataset
+from repro.cnn.models import build_cnn
+from repro.core.env import QuantEnv
+from repro.quant.wrpn import fake_quant_ste
+
+
+def _quantize_cnn_params(params, bits_by_name: dict):
+    new = {}
+    for name, p in params.items():
+        if name in bits_by_name:
+            new[name] = {"w": fake_quant_ste(p["w"], bits_by_name[name]),
+                         "b": p["b"]}
+        else:
+            new[name] = p
+    return new
+
+
+class CNNTask:
+    def __init__(self, net_name: str, seed: int = 0, batch: int = 128,
+                 lr: float = 2e-3):
+        self.model = build_cnn(net_name)
+        self.data = make_dataset(DATASET_FOR[net_name], seed)
+        self.batch = batch
+        self.seed = seed
+        self.groups = self.model.quant_groups()
+        self.frozen = self.model.frozen_bits()
+        self.names = [g.name for g in self.groups]
+        self._index = 0
+
+        opt_lr = lr
+
+        def loss_fn(params, x, y, bits_vec):
+            bits = {n: bits_vec[i] for i, n in enumerate(self.names)}
+            qp = _quantize_cnn_params(params, bits)
+            logits = self.model.apply(qp, x)
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+            return nll
+
+        @jax.jit
+        def train_step(params, mom, x, y, bits_vec):
+            g = jax.grad(loss_fn)(params, x, y, bits_vec)
+            mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
+            params = jax.tree.map(lambda p, m: p - opt_lr * m, params, mom)
+            return params, mom
+
+        @jax.jit
+        def acc_fn(params, x, y, bits_vec):
+            bits = {n: bits_vec[i] for i, n in enumerate(self.names)}
+            qp = _quantize_cnn_params(params, bits)
+            logits = self.model.apply(qp, x)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._train_step = train_step
+        self._acc_fn = acc_fn
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.mom = jax.tree.map(jnp.zeros_like, self.params)
+        self._fp_vec = jnp.full((len(self.names),), 32, jnp.int32)
+        # fixed validation set
+        self._val = [self.data.batch(256, i, "val") for i in range(2)]
+        self.fp_acc = None
+
+    def _bits_vec(self, bits_by_name: dict | None):
+        if bits_by_name is None:
+            return self._fp_vec
+        return jnp.asarray([bits_by_name.get(n, 32) for n in self.names], jnp.int32)
+
+    # ------------------------------------------------------------------
+    def train(self, steps: int, bits_by_name: dict | None = None,
+              params=None, mom=None):
+        params = self.params if params is None else params
+        mom = self.mom if mom is None else mom
+        vec = self._bits_vec(bits_by_name)
+        for _ in range(steps):
+            x, y = self.data.batch(self.batch, self._index, "train")
+            self._index += 1
+            params, mom = self._train_step(params, mom, jnp.asarray(x),
+                                           jnp.asarray(y), vec)
+        return params, mom
+
+    def accuracy(self, params, bits_by_name: dict | None = None) -> float:
+        vec = self._bits_vec(bits_by_name)
+        accs = [float(self._acc_fn(params, jnp.asarray(x), jnp.asarray(y), vec))
+                for x, y in self._val]
+        return float(np.mean(accs))
+
+    def pretrain(self, steps: int = 400) -> float:
+        self.params, self.mom = self.train(steps)
+        self.fp_acc = self.accuracy(self.params)
+        return self.fp_acc
+
+    # ------------------------------------------------------------------
+    def evaluate_bits(self, bits_by_name: dict, retrain_steps: int = 4) -> float:
+        """ReLeQ accuracy oracle: short retrain then rel. val accuracy."""
+        params, _ = self.train(retrain_steps, bits_by_name,
+                               params=self.params, mom=jax.tree.map(jnp.zeros_like, self.mom))
+        acc = self.accuracy(params, bits_by_name)
+        return acc / max(self.fp_acc, 1e-6)
+
+    def long_retrain(self, bits_by_name: dict, steps: int = 200) -> float:
+        """Paper's final step: long QAT retrain at the chosen bitwidths."""
+        params, _ = self.train(steps, bits_by_name, params=self.params,
+                               mom=jax.tree.map(jnp.zeros_like, self.mom))
+        return self.accuracy(params, bits_by_name) / max(self.fp_acc, 1e-6)
+
+    # ------------------------------------------------------------------
+    def weight_std(self) -> dict:
+        return {n: float(jnp.std(self.params[n]["w"])) for n in self.names}
+
+    def weights_by_name(self) -> dict:
+        return {n: self.params[n]["w"] for n in self.names}
+
+    def make_env_factory(self, *, retrain_steps: int = 4,
+                         reward_mode: str = "proposed",
+                         bitset=(2, 3, 4, 5, 6, 7, 8)):
+        def factory(env_id: int) -> QuantEnv:
+            return QuantEnv(
+                groups=self.groups,
+                evaluate=lambda bits: self.evaluate_bits(bits, retrain_steps),
+                weight_std=self.weight_std(),
+                bitset=bitset,
+                frozen=self.frozen,
+                reward_mode=reward_mode,
+            )
+        return factory

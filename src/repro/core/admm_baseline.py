@@ -1,0 +1,73 @@
+"""ADMM bitwidth-selection baseline (paper §4.6 / Table 4, Ye et al. [46]).
+
+The paper describes the comparison method as: "runs a binary search to
+minimize the total square quantization error in order to decide the
+quantization levels for the layers, then an iterative optimization
+technique for fine-tuning".  We implement that decision rule:
+
+    min_b  Σ_l ‖W_l − Q_{b_l}(W_l)‖²   s.t.  Σ_l cost_l·b_l ≤ budget
+
+solved exactly by binary search on the Lagrange multiplier λ — for each λ
+every layer independently picks b_l = argmin_b err_l(b) + λ·cost_l·b (the
+per-layer objective is separable), and λ is bisected until the budget
+binds.  Fine-tuning afterwards uses the same QAT short-retrain as ReLeQ,
+so the comparison isolates the bitwidth-*selection* policy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.quant.wrpn import fake_quant
+
+
+def layer_quant_errors(weights_by_name: dict, bitset=(2, 3, 4, 5, 6, 7, 8)):
+    """name -> {bits: squared quantization error}."""
+    import jax.numpy as jnp
+
+    out = {}
+    for name, w in weights_by_name.items():
+        w = jnp.asarray(w, jnp.float32)
+        errs = {}
+        for b in bitset:
+            wq = fake_quant(w, b)
+            errs[b] = float(jnp.sum((w - wq) ** 2))
+        out[name] = errs
+    return out
+
+
+def admm_select(groups, weights_by_name: dict, budget_avg_bits: float,
+                bitset=(2, 3, 4, 5, 6, 7, 8), frozen: dict | None = None,
+                iters: int = 50) -> dict:
+    """-> bits dict meeting the average-bits budget with min total sq error."""
+    frozen = frozen or {}
+    searchable = [g for g in groups if g.name not in frozen]
+    errs = layer_quant_errors(
+        {g.name: weights_by_name[g.name] for g in searchable}, bitset)
+    cost = {g.name: float(g.n_weights) for g in searchable}
+    budget = budget_avg_bits * sum(cost.values())
+
+    def pick(lmbda):
+        bits = {}
+        for g in searchable:
+            obj = [(errs[g.name][b] + lmbda * cost[g.name] * b, b) for b in bitset]
+            bits[g.name] = min(obj)[1]
+        return bits
+
+    lo, hi = 0.0, 1.0
+    # grow hi until budget satisfied
+    for _ in range(60):
+        b = pick(hi)
+        if sum(cost[n] * v for n, v in b.items()) <= budget:
+            break
+        hi *= 4.0
+    for _ in range(iters):  # bisect λ
+        mid = 0.5 * (lo + hi)
+        b = pick(mid)
+        used = sum(cost[n] * v for n, v in b.items())
+        if used > budget:
+            lo = mid
+        else:
+            hi = mid
+    bits = pick(hi)
+    bits.update(frozen)
+    return bits

@@ -1,0 +1,94 @@
+"""ReLeQ agent networks (paper §2.7): shared-LSTM actor-critic, pure JAX.
+
+    state embedding -> LSTM(128)  ("first hidden layer for both networks")
+        policy head: FC 128 -> FC 128 -> |bitwidths| softmax
+        value head:  FC 128 -> FC 64  -> 1
+
+The LSTM carry persists across the layer-steps of one episode — that is how
+"quantization levels are selected with the context of previous layers'
+bitwidths" — and resets between episodes.  Paper reports the LSTM gives
+~1.33× faster convergence than an MLP-only agent (we reproduce that
+ablation in benchmarks/fig_lstm_ablation.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = 128
+
+
+def _dense(key, n_in, n_out, scale=None):
+    s = scale if scale is not None else (2.0 / n_in) ** 0.5
+    return {
+        "w": jax.random.normal(key, (n_in, n_out), jnp.float32) * s,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def init_agent(key, state_dim: int, num_actions: int):
+    ks = jax.random.split(key, 7)
+    return {
+        "lstm": {
+            "wx": jax.random.normal(ks[0], (state_dim, 4 * HIDDEN), jnp.float32)
+            * (1.0 / state_dim) ** 0.5,
+            "wh": jax.random.normal(ks[1], (HIDDEN, 4 * HIDDEN), jnp.float32)
+            * (1.0 / HIDDEN) ** 0.5,
+            "b": jnp.zeros((4 * HIDDEN,), jnp.float32),
+        },
+        "pi1": _dense(ks[2], HIDDEN, 128),
+        "pi2": _dense(ks[3], 128, 128),
+        "pi_head": _dense(ks[4], 128, num_actions, scale=0.01),
+        "v1": _dense(ks[5], HIDDEN, 128),
+        "v2": _dense(ks[6], 128, 64),
+        "v_head": _dense(jax.random.fold_in(ks[6], 1), 64, 1, scale=0.01),
+    }
+
+
+def lstm_carry(batch: int):
+    return (jnp.zeros((batch, HIDDEN), jnp.float32),
+            jnp.zeros((batch, HIDDEN), jnp.float32))
+
+
+def _lstm_step(p, carry, x):
+    h, c = carry
+    z = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c2 = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+    return (h2, c2), h2
+
+
+def _ff(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def agent_step(params, carry, state, use_lstm: bool = True):
+    """One step.  state: (B, state_dim) -> (carry', logits (B, A), value (B,))."""
+    if use_lstm:
+        carry2, h = _lstm_step(params["lstm"], carry, state)
+    else:  # MLP ablation (paper §2.7: LSTM converges ~1.33× faster)
+        carry2, h = carry, jnp.tanh(state @ params["lstm"]["wx"][:, :HIDDEN])
+    hp = jax.nn.relu(_ff(params["pi1"], h))
+    hp = jax.nn.relu(_ff(params["pi2"], hp))
+    logits = _ff(params["pi_head"], hp)
+    hv = jax.nn.relu(_ff(params["v1"], h))
+    hv = jax.nn.relu(_ff(params["v2"], hv))
+    value = _ff(params["v_head"], hv)[..., 0]
+    return carry2, logits, value
+
+
+def rollout_logits(params, states, use_lstm: bool = True):
+    """Teacher-forced pass over stored trajectories.
+
+    states: (B, T, S) -> logits (B, T, A), values (B, T).
+    """
+    B = states.shape[0]
+
+    def step(carry, s_t):
+        carry, logits, value = agent_step(params, carry, s_t, use_lstm)
+        return carry, (logits, value)
+
+    _, (logits, values) = jax.lax.scan(step, lstm_carry(B),
+                                       jnp.moveaxis(states, 1, 0))
+    return jnp.moveaxis(logits, 0, 1), jnp.moveaxis(values, 0, 1)

@@ -1,0 +1,93 @@
+"""The ReLeQ quantization environment (paper §2.3-2.5, Fig 4).
+
+An episode walks the network's quantizable groups in order; at step t the
+agent picks group t's bitwidth from the flexible action set (Fig 2a — any
+bitwidth, not ±1 moves).  The environment then
+
+  1. updates the policy-so-far,
+  2. obtains the State of Relative Accuracy from the *evaluator* (short
+     retrain + validation, or the cheaper end-of-episode mode the paper
+     uses for deeper nets),
+  3. computes the State of Quantization (costmodel.py, the paper's formula),
+  4. emits the shaped reward (reward.py).
+
+The evaluator is an injected callable ``evaluate(bits_by_name) -> rel_acc``
+so the same environment drives the paper's CNNs (accuracy ratio) and the
+LM stack (likelihood ratio), locally or sharded over a pod.
+
+State embedding (Table 1, both axes):
+  layer-specific static : layer index (norm), log #weights (norm), weight std
+  layer-specific dynamic: current bitwidth (norm)
+  network-specific dyn. : State_Quantization, State_Accuracy
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.reward import REWARDS
+
+STATE_DIM = 6
+
+
+@dataclass
+class QuantEnv:
+    groups: list                      # QuantGroup list (searchable ORDER)
+    evaluate: object                  # callable(dict name->bits) -> rel acc
+    weight_std: dict                  # name -> std of the fp weights (static)
+    bitset: tuple = (2, 3, 4, 5, 6, 7, 8)
+    frozen: dict = field(default_factory=dict)   # name -> fixed bits
+    reward_mode: str = "proposed"
+    reward_kwargs: dict = field(default_factory=dict)
+    eval_mode: str = "per_step"       # per_step | episode_end (deep nets)
+    init_bits: int = 8                # paper: all layers start at 8 bits
+
+    def __post_init__(self):
+        self.searchable = [g for g in self.groups if g.name not in self.frozen]
+        self.T = len(self.searchable)
+        self._logw = {g.name: np.log(max(g.n_weights, 1)) for g in self.groups}
+        self._logw_max = max(self._logw.values())
+        self._reward = REWARDS[self.reward_mode]
+        self.reset()
+
+    # ------------------------------------------------------------------
+    def reset(self):
+        self.bits = {g.name: self.init_bits for g in self.groups}
+        self.bits.update(self.frozen)
+        self.t = 0
+        self.acc_state = 1.0  # starts from the (re)trained 8-bit baseline
+        self.quant_state = self._quant_state()
+        return self._obs()
+
+    def _quant_state(self) -> float:
+        vec = [self.bits[g.name] for g in self.groups]
+        return costmodel.state_of_quantization(vec, self.groups)
+
+    def _obs(self) -> np.ndarray:
+        g = self.searchable[min(self.t, self.T - 1)]
+        return np.asarray([
+            self.t / max(self.T - 1, 1),
+            self._logw[g.name] / self._logw_max,
+            min(self.weight_std.get(g.name, 0.0), 2.0),
+            self.bits[g.name] / max(self.bitset),
+            self.quant_state,
+            min(self.acc_state, 1.2),
+        ], np.float32)
+
+    # ------------------------------------------------------------------
+    def step(self, action: int):
+        """-> (obs, reward, done, info)."""
+        g = self.searchable[self.t]
+        self.bits[g.name] = int(self.bitset[action])
+        self.quant_state = self._quant_state()
+        done = self.t == self.T - 1
+        if self.eval_mode == "per_step" or done:
+            self.acc_state = float(self.evaluate(dict(self.bits)))
+        reward = self._reward(self.acc_state, self.quant_state,
+                              **self.reward_kwargs)
+        self.t += 1
+        info = {"bits": dict(self.bits), "acc": self.acc_state,
+                "quant": self.quant_state, "group": g.name}
+        return self._obs(), float(reward), done, info

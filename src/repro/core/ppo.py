@@ -1,0 +1,109 @@
+"""Proximal Policy Optimization (paper §2.7, Table 3) — from scratch.
+
+Hyper-parameters follow Table 3: Adam step 1e-4, GAE parameter 0.99,
+3 epochs per update, clipping ε = 0.1 (Table 5 shows 0.1 wins).  The
+clipped surrogate is the standard PPO objective; advantages come from GAE
+over the per-layer-step rewards of each episode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import agent_step, lstm_carry, rollout_logits
+from repro.optim.adamw import AdamW
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 1e-4
+    clip_eps: float = 0.1
+    epochs: int = 3
+    gamma: float = 0.99          # Table 3 "GAE parameter"
+    lam: float = 0.95
+    value_coef: float = 0.5
+    entropy_coef: float = 1e-2
+    max_grad_norm: float = 1.0
+    use_lstm: bool = True        # paper §2.7 ablation switch
+
+
+def gae_advantages(rewards, values, gamma: float, lam: float):
+    """rewards/values: (B, T) -> (advantages, returns), episode ends at T."""
+    B, T = rewards.shape
+    adv = np.zeros((B, T), np.float32)
+    last = np.zeros((B,), np.float32)
+    next_v = np.zeros((B,), np.float32)
+    for t in range(T - 1, -1, -1):
+        delta = rewards[:, t] + gamma * next_v - values[:, t]
+        last = delta + gamma * lam * last
+        adv[:, t] = last
+        next_v = values[:, t]
+    returns = adv + values
+    return adv, returns
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ppo_loss(params, batch, cfg: PPOConfig):
+    logits, values = rollout_logits(params, batch["states"], cfg.use_lstm)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, batch["actions"][..., None], -1)[..., 0]
+    ratio = jnp.exp(logp - batch["logp_old"])
+    adv = batch["adv"]
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+    pi_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+    v_loss = jnp.mean((values - batch["returns"]) ** 2)
+    entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, -1))
+    total = pi_loss + cfg.value_coef * v_loss - cfg.entropy_coef * entropy
+    return total, {"pi_loss": pi_loss, "v_loss": v_loss, "entropy": entropy,
+                   "ratio_max": jnp.max(ratio)}
+
+
+class PPO:
+    def __init__(self, params, cfg: PPOConfig = PPOConfig()):
+        self.cfg = cfg
+        self.opt = AdamW(lr=cfg.lr, weight_decay=0.0, clip_norm=cfg.max_grad_norm)
+        self.params = params
+        self.opt_state = self.opt.init(params)
+        self._grad = jax.jit(
+            jax.grad(lambda p, b: ppo_loss(p, b, self.cfg)[0]))
+
+    def update(self, trajectories: dict) -> dict:
+        """trajectories: states (B,T,S) f32, actions (B,T) i32,
+        logp_old (B,T), rewards (B,T), values (B,T) — numpy."""
+        adv, ret = gae_advantages(trajectories["rewards"], trajectories["values"],
+                                  self.cfg.gamma, self.cfg.lam)
+        batch = {
+            "states": jnp.asarray(trajectories["states"], jnp.float32),
+            "actions": jnp.asarray(trajectories["actions"], jnp.int32),
+            "logp_old": jnp.asarray(trajectories["logp_old"], jnp.float32),
+            "adv": jnp.asarray(adv),
+            "returns": jnp.asarray(ret),
+        }
+        metrics = {}
+        for _ in range(self.cfg.epochs):
+            grads = self._grad(self.params, batch)
+            self.params, self.opt_state = self.opt.update(
+                self.params, grads, self.opt_state)
+        _, metrics = ppo_loss(self.params, batch, self.cfg)
+        return {k: float(v) for k, v in metrics.items()}
+
+    # -- acting ----------------------------------------------------------
+    def act(self, carry, state, rng):
+        """state: (B, S) -> (carry', action (B,), logp (B,), value (B,),
+        probs (B, A))."""
+        carry, logits, value = jax.jit(agent_step, static_argnames=("use_lstm",))(
+            self.params, carry, state, use_lstm=self.cfg.use_lstm)
+        probs = jax.nn.softmax(logits)
+        action = jax.random.categorical(rng, logits)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                   action[:, None], -1)[:, 0]
+        return carry, action, logp, value, probs
+
+    def initial_carry(self, batch: int):
+        return lstm_carry(batch)

@@ -1,0 +1,167 @@
+"""ReLeQ search driver: PPO agent × quantization environment (Fig 4).
+
+Faithful mode (paper): one environment, PPO update at the end of every
+episode.  Scale-out mode: ``num_envs`` environments step in lockstep
+through one batched agent forward — on a multi-pod mesh each pod evaluates
+its own environment's candidate policy, turning the search's wall-clock
+bottleneck (short retrains) embarrassingly parallel (DESIGN.md §4).
+
+Produces the full learning record the paper's figures need:
+per-episode (reward, acc state, quant state, bits) and the per-layer
+action-probability evolution (Fig 5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import init_agent
+from repro.core.env import STATE_DIM, QuantEnv
+from repro.core.ppo import PPO, PPOConfig
+
+
+@dataclass
+class SearchResult:
+    best_bits: dict
+    best_reward: float
+    episodes: list = field(default_factory=list)   # per-episode records
+    prob_evolution: list = field(default_factory=list)  # (episode, T, A)
+
+    def bits_vector(self, groups):
+        return [self.best_bits[g.name] for g in groups]
+
+    def average_bits(self, searchable_only=None) -> float:
+        names = searchable_only or list(self.best_bits)
+        return float(np.mean([self.best_bits[n] for n in names]))
+
+
+class ReLeQSearch:
+    def __init__(self, make_env, *, num_envs: int = 1, seed: int = 0,
+                 ppo_config: PPOConfig = PPOConfig()):
+        self.envs = [make_env(i) for i in range(num_envs)]
+        self.num_envs = num_envs
+        num_actions = len(self.envs[0].bitset)
+        key = jax.random.PRNGKey(seed)
+        params = init_agent(key, STATE_DIM, num_actions)
+        self.ppo = PPO(params, ppo_config)
+        self.rng = jax.random.PRNGKey(seed + 1)
+
+    def _collect(self):
+        """Run one episode in every env -> trajectories + records."""
+        E, T = self.num_envs, self.envs[0].T
+        states = np.zeros((E, T, STATE_DIM), np.float32)
+        actions = np.zeros((E, T), np.int32)
+        logps = np.zeros((E, T), np.float32)
+        values = np.zeros((E, T), np.float32)
+        rewards = np.zeros((E, T), np.float32)
+        probs = np.zeros((E, T, len(self.envs[0].bitset)), np.float32)
+        infos = [None] * E
+
+        obs = np.stack([env.reset() for env in self.envs])
+        carry = self.ppo.initial_carry(E)
+        for t in range(T):
+            self.rng, sub = jax.random.split(self.rng)
+            carry, act, logp, val, pr = self.ppo.act(carry, jnp.asarray(obs), sub)
+            act = np.asarray(act)
+            states[:, t] = obs
+            actions[:, t] = act
+            logps[:, t] = np.asarray(logp)
+            values[:, t] = np.asarray(val)
+            probs[:, t] = np.asarray(pr)
+            nxt = []
+            for e, env in enumerate(self.envs):
+                o, r, done, info = env.step(int(act[e]))
+                rewards[e, t] = r
+                nxt.append(o)
+                if done:
+                    infos[e] = info
+            obs = np.stack(nxt)
+        traj = {"states": states, "actions": actions, "logp_old": logps,
+                "values": values, "rewards": rewards}
+        return traj, rewards, infos, probs
+
+    def run(self, episodes: int, log_every: int = 0) -> SearchResult:
+        result = SearchResult(best_bits={}, best_reward=-np.inf)
+        for ep in range(episodes):
+            traj, rewards, infos, probs = self._collect()
+            metrics = self.ppo.update(traj)
+            for e, info in enumerate(infos):
+                final_r = float(rewards[e, -1])
+                result.episodes.append({
+                    "episode": ep, "env": e, "reward": final_r,
+                    "mean_reward": float(rewards[e].mean()),
+                    "acc": info["acc"], "quant": info["quant"],
+                    "bits": info["bits"],
+                })
+                if final_r > result.best_reward:
+                    result.best_reward = final_r
+                    result.best_bits = dict(info["bits"])
+            result.prob_evolution.append(probs.mean(axis=0))
+            if log_every and (ep + 1) % log_every == 0:
+                last = result.episodes[-1]
+                print(f"ep {ep+1:4d} reward={last['reward']:.3f} "
+                      f"acc={last['acc']:.3f} quant={last['quant']:.3f} "
+                      f"avg_bits={np.mean(list(last['bits'].values())):.2f} "
+                      f"pi_loss={metrics['pi_loss']:.4f}")
+        return result
+
+
+def make_lm_env_factory(model, params, data, *, finetune_steps: int = 4,
+                        eval_batches: int = 1, reward_mode: str = "proposed",
+                        bitset=(2, 3, 4, 5, 6, 7, 8), eval_mode: str = "episode_end",
+                        lr: float = 1e-4):
+    """Environment factory for LM architectures.
+
+    Accuracy proxy: per-token likelihood ratio exp(nll_fp − nll_q) after
+    ``finetune_steps`` of QAT at the candidate policy (the paper's "short
+    retrain", DESIGN.md §3).  The candidate bits enter the jit'd step as
+    data, so every candidate shares one executable.
+    """
+    import jax.numpy as jnp
+
+    from repro.optim import AdamW
+    from repro.quant.qat import bits_assignment, policy_for
+    from repro.quant.policy import QuantPolicy
+    from repro.train.train_step import make_eval_step, make_fp_eval_step, make_train_step
+
+    groups = model.quant_groups()
+    frozen = model.frozen_bits()
+    eval_step = make_eval_step(model)
+    fp_eval = make_fp_eval_step(model)
+    opt = AdamW(lr=lr, weight_decay=0.0)
+    train_step = make_train_step(model, opt, donate=False)
+    eval_batch = [data.eval_batch(data.local_batch, index=10_000_000 + i)
+                  for i in range(eval_batches)]
+    nll_fp = float(np.mean([float(fp_eval(params, b)) for b in eval_batch]))
+
+    wstd = {}
+    for g in groups:
+        from repro.quant.qat import get_by_path
+        leaf = get_by_path(params, g.path)
+        if g.layer is not None:
+            leaf = leaf[g.layer]
+        wstd[g.name] = float(jnp.std(leaf.astype(jnp.float32)))
+
+    def evaluate(bits_by_name: dict) -> float:
+        pol = QuantPolicy.from_array(tuple(g.name for g in groups),
+                                     [bits_by_name[g.name] for g in groups])
+        bm = {k: jnp.asarray(v) for k, v in bits_assignment(groups, pol).items()}
+        if finetune_steps:
+            state = {"params": params, "opt": opt.init(params)}
+            for _ in range(finetune_steps):
+                state, _ = train_step(state, data.next(), bm)
+            p_eval = state["params"]
+        else:
+            p_eval = params
+        nll_q = float(np.mean([float(eval_step(p_eval, b, bm)) for b in eval_batch]))
+        return float(np.exp(nll_fp - nll_q))
+
+    def factory(env_id: int) -> QuantEnv:
+        return QuantEnv(groups=groups, evaluate=evaluate, weight_std=wstd,
+                        bitset=bitset, frozen=frozen, reward_mode=reward_mode,
+                        eval_mode=eval_mode)
+
+    return factory

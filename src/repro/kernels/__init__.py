@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the quantization hot paths.
+
+- fake_quant: fused WRPN quantize-dequantize (QAT inner loop).
+- qmm: packed low-bit weight matmul — ``dequant`` path (one MXU matmul)
+  and ``bitserial`` path (one binary matmul per plane; the TPU analogue of
+  the paper's Stripes bit-serial execution, see DESIGN.md §3).
+
+``ops`` holds the public wrappers (padding, dispatch, CPU fallbacks);
+``ref`` holds the pure-jnp oracles every kernel is tested against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: WRPN mid-tread fake-quant (quantize-dequantize).
+
+This is the QAT hot path: every train step applies QDQ to every quantizable
+weight tile (DESIGN.md §3).  As a fused elementwise kernel it is trivially
+memory-bound; the point of the Pallas version is (a) to fuse clip/round/
+rescale into one VMEM pass instead of XLA's multi-op HLO chain, and (b) to
+take ``bits`` as *data* (SMEM scalar) so one executable serves every
+bitwidth policy — including a vectorized batch of ReLeQ environments.
+
+Grid: 2-D over (M/bm, N/bn) row-major tiles.  Tiles are (128, 128)-aligned
+by the ops.py wrapper (pad + slice) so VREG lanes stay full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (256, 256)  # 256·256·4 B = 256 KiB/tile in VMEM — far under 16 MiB
+
+
+def _fake_quant_kernel(bits_ref, scale_ref, w_ref, o_ref):
+    bits = bits_ref[0]
+    scale = scale_ref[0]
+    n = jnp.maximum(jnp.exp2(bits.astype(jnp.float32) - 1.0) - 1.0, 1.0)
+    w = w_ref[...].astype(jnp.float32)
+    wc = jnp.clip(w / scale, -1.0, 1.0)
+    wq = jnp.round(wc * n) / n * scale
+    out = jnp.where(bits >= 32, w, wq)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fake_quant_pallas(
+    w: jax.Array,
+    bits: jax.Array,
+    scale: jax.Array,
+    *,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """QDQ ``w`` (2-D, tile-aligned) at runtime-``bits`` with per-tensor scale.
+
+    ``bits``: int32 scalar array.  ``scale``: float32 scalar array (max|w|).
+    Shape alignment/padding is the caller's job (see ops.fake_quant).
+    """
+    M, N = w.shape
+    bm, bn = min(block[0], M), min(block[1], N)
+    if M % bm or N % bn:
+        raise ValueError(f"shape {(M, N)} not divisible by block {(bm, bn)}")
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # bits (1,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scale (1,)
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), w.dtype),
+        interpret=interpret,
+        name="wrpn_fake_quant",
+    )(
+        jnp.asarray(bits, jnp.int32).reshape(1),
+        jnp.asarray(scale, jnp.float32).reshape(1),
+        w,
+    )

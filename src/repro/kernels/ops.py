@@ -1,0 +1,120 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy (``REPRO_PALLAS`` env var):
+- ``auto`` (default): compiled Pallas on TPU, interpret-mode Pallas on CPU
+  for any array small enough to test, pure-jnp ref otherwise.  Interpret
+  mode executes the kernel body in Python per grid step — correct but slow —
+  so the auto path caps interpreted problem sizes.
+- ``interpret``: force interpret mode (kernel tests use this).
+- ``ref``: force the pure-jnp oracle (what the CPU training loops use).
+- ``on``: force compiled Pallas (real TPU runs).
+
+The wrappers own all shape normalization: flattening batch dims, padding to
+tile multiples, slicing back.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.qmm import qmm_pallas
+from repro.quant.wrpn import tensor_scale
+
+_INTERPRET_ELEM_CAP = 1 << 22  # don't interpret-execute tiles beyond ~4M elems
+
+
+def _mode() -> str:
+    m = os.environ.get("REPRO_PALLAS", "auto")
+    if m not in ("auto", "interpret", "ref", "on"):
+        raise ValueError(f"REPRO_PALLAS={m!r}")
+    return m
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def fake_quant(w: jax.Array, bits, scale=None) -> jax.Array:
+    """WRPN QDQ on an arbitrary-shape tensor; runtime ``bits`` scalar."""
+    bits = jnp.asarray(bits, jnp.int32)
+    if scale is None:
+        scale = tensor_scale(w)
+    scale = jnp.asarray(scale, jnp.float32).reshape(())
+    mode = _mode()
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and w.size > _INTERPRET_ELEM_CAP):
+        return kref.fake_quant_ref(w, bits, scale)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1]) if w.ndim != 2 else w
+    M, N = w2.shape
+    bm, bn = min(256, M), min(256, N)
+    w2p = _pad_to(w2, (bm, bn))  # pad up to tile multiples, slice back below
+    out = fake_quant_pallas(w2p, bits, scale, block=(bm, bn), interpret=interpret)
+    out = out[:M, :N]
+    return out.reshape(shape)
+
+
+def qmm(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    path: str = "auto",
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Batched y = x @ dequant(packed).  x: (..., K); packed: (bits, K//8, N).
+
+    ``path='auto'`` picks bitserial when the flattened batch M ≤ 32 (decode
+    regime: memory-bound, MXU idle) and dequant otherwise (DESIGN.md §3).
+    """
+    *batch, K = x.shape
+    bts, K8, N = packed.shape
+    assert bts == bits and K8 * 8 == K, (x.shape, packed.shape, bits)
+    M = 1
+    for b in batch:
+        M *= b
+    x2 = x.reshape(M, K)
+    if path == "auto":
+        path = "bitserial" if M <= 32 else "dequant"
+    mode = _mode()
+    work = M * K * N
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and work > _INTERPRET_ELEM_CAP):
+        out = kref.qmm_ref(x2, packed, scale, bits)
+        return out.astype(out_dtype).reshape(*batch, N)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    # tile alignment: pick divisors, pad M (cheap) rather than K/N (packed)
+    bm = _pick_block(M, 128, pad_ok=True)
+    bn = _pick_block(N, 256)
+    bk = _pick_block(K, 512, multiple_of=8)
+    x2p = _pad_to(x2, (bm, 1))
+    out = qmm_pallas(
+        x2p, packed, scale.reshape(1, N), bits=bits, path=path,
+        block=(bm, bn, bk), interpret=interpret, out_dtype=out_dtype,
+    )
+    return out[:M].reshape(*batch, N)
+
+
+def _pick_block(dim: int, target: int, multiple_of: int = 1, pad_ok: bool = False) -> int:
+    """Largest divisor of ``dim`` ≤ target that's a multiple of multiple_of;
+    if pad_ok, just return min(target, next multiple) and let caller pad."""
+    if pad_ok:
+        return min(target, dim) if dim >= target else dim
+    b = min(target, dim)
+    while b > 1 and (dim % b or b % multiple_of):
+        b -= 1
+    return max(b, 1)

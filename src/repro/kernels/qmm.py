@@ -1,0 +1,148 @@
+"""Pallas TPU kernels: packed low-bit weight × activation matmul (qmm).
+
+Two paths over the same bitplane storage (DESIGN.md §3):
+
+``dequant`` (prefill / training-shape regime, compute-bound)
+    Per (bm, bn, bk) tile: unpack the k bitplanes in VMEM, reconstruct the
+    signed codes once, run ONE MXU matmul at bf16.  HBM traffic for weights
+    is k/8 bytes/weight; MXU work identical to a dense matmul.
+
+``bitserial`` (decode regime, memory-bound)
+    The TPU analogue of Stripes: ``x @ W = (Σ_b 2^b (x @ plane_b) − n·Σ_k x)
+    / n · scale``.  Each binary plane hits the MXU separately, so compute
+    scales linearly with k — irrelevant at decode batch sizes where the MXU
+    is starved anyway — and weight traffic is the same k/8 bytes/weight.
+    Keeping the planes as {0,1} bf16 matmuls (instead of reconstructing)
+    means the unpack loop never materializes an int tile: each plane is a
+    byte-shift + mask, which Mosaic maps onto VPU lanes.
+
+Both paths share the oracle :func:`repro.kernels.ref.qmm_ref`.
+
+Layout notes
+------------
+- packed: ``(bits, K//8, N) uint8`` — N minor-most (lane axis), so the
+  unpack broadcast `(K//8, 8, N)` keeps lanes contiguous and the
+  `(K//8, 8, N) -> (K, N)` reshape is a sublane relayout Mosaic supports.
+  The 8× sublane expansion is amortized over a (bm × bn) MXU tile.
+- The k-grid accumulates into a VMEM f32 scratch; output is written on the
+  last k step (revisited-output pattern), with the per-column scale applied
+  once at the end.
+- Tile defaults: (bm, bn, bk) = (128, 256, 512) → x tile 128·512·2 B=128 KiB,
+  packed tile ≤ 8·64·256 B = 128 KiB, acc 128 KiB — comfortably in VMEM
+  with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 256, 512
+
+
+def _unpack_tile(p, bits: int):
+    """(bits, bk//8, bn) uint8 -> (bits, bk, bn) int32 in {0,1}."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, None, :, None]
+    bit = (p[:, :, None, :] >> shifts) & jnp.uint8(1)  # (bits, bk//8, 8, bn)
+    b, k8, _, n = bit.shape
+    return bit.reshape(b, k8 * 8, n).astype(jnp.int32)
+
+
+def _qmm_dequant_kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, bits, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    planes = _unpack_tile(p_ref[...], bits)  # (bits, bk, bn) {0,1}
+    n_lvl = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    u = planes[0]
+    for b in range(1, bits):  # static unroll: Σ_b plane_b << b
+        u = u + (planes[b] << b)
+    w = (u - n_lvl).astype(jnp.bfloat16)  # signed codes, one tile
+    x = x_ref[...].astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / n_lvl * s_ref[...]).astype(o_ref.dtype)
+
+
+def _qmm_bitserial_kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, off_ref, *, bits, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        off_ref[...] = jnp.zeros_like(off_ref)
+
+    x = x_ref[...].astype(jnp.bfloat16)
+    planes = _unpack_tile(p_ref[...], bits)  # (bits, bk, bn)
+    acc = acc_ref[...]
+    for b in range(bits):  # static unroll: one binary MXU matmul per plane
+        pb = planes[b].astype(jnp.bfloat16)
+        acc += float(1 << b) * jnp.dot(x, pb, preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+    # rank-1 offset: n_lvl · rowsum(x), accumulated over the K grid
+    off_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        n_lvl = 2 ** (bits - 1) - 1 if bits > 1 else 1
+        y = (acc_ref[...] - n_lvl * off_ref[...]) / n_lvl * s_ref[...]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "path", "block", "interpret", "out_dtype")
+)
+def qmm_pallas(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    path: str = "dequant",
+    block: tuple[int, int, int] = (DEFAULT_BM, DEFAULT_BN, DEFAULT_BK),
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """y[M,N] = x[M,K] @ dequant(packed[bits,K//8,N], scale[1,N]).
+
+    Shapes must be tile-aligned (ops.qmm pads).  ``bits`` static (the packed
+    buffer's plane count is structural).
+    """
+    M, K = x.shape
+    bts, K8, N = packed.shape
+    if bts != bits or K8 * 8 != K:
+        raise ValueError(f"packed {packed.shape} inconsistent with x {x.shape}, bits={bits}")
+    bm, bn, bk = (min(block[0], M), min(block[1], N), min(block[2], K))
+    if M % bm or N % bn or K % bk or bk % 8:
+        raise ValueError(f"shape {(M, K, N)} not divisible by block {(bm, bn, bk)}")
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    kernel = _qmm_dequant_kernel if path == "dequant" else _qmm_bitserial_kernel
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if path == "bitserial":
+        scratch.append(pltpu.VMEM((bm, 1), jnp.float32))
+    return pl.pallas_call(
+        functools.partial(kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bits, bk // 8, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"qmm_{path}_{bits}b",
+    )(x, packed, scale)

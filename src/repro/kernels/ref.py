@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+They are also the CPU fallback path used when Pallas interpret mode is
+disabled (`REPRO_PALLAS=off`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.pack import unpack_bitplanes
+from repro.quant.wrpn import fake_quant as _fake_quant_jnp
+
+
+def fake_quant_ref(w: jax.Array, bits, scale: jax.Array) -> jax.Array:
+    """WRPN mid-tread QDQ with externally supplied per-tensor scale."""
+    return _fake_quant_jnp(w, bits, scale=scale)
+
+
+def dequant_ref(packed: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Packed bitplanes (bits, K//8, N) + scale (1, N) -> float32 (K, N)."""
+    n = float(2 ** (bits - 1) - 1) if bits > 1 else 1.0
+    codes = unpack_bitplanes(packed, bits)
+    return codes.astype(jnp.float32) / n * scale
+
+
+def qmm_ref(
+    x: jax.Array, packed: jax.Array, scale: jax.Array, bits: int
+) -> jax.Array:
+    """y = x @ dequant(packed).  x: (M, K) float; out: (M, N) float32.
+
+    Oracle for BOTH qmm paths (dequant and bitserial compute the same
+    function; they differ only in where the Σ_b 2^b reduction happens).
+    """
+    w = dequant_ref(packed, scale, bits)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

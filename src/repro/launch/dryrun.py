@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs ShapeDtypeStruct inputs (launch/specs.py — no allocation),
+  3. ``jit(step).lower(...).compile()`` with the dist/sharding.py specs,
+  4. prints ``memory_analysis()`` (proves fit) and ``cost_analysis()``,
+  5. parses the optimized HLO for collective bytes,
+  6. writes the roofline record to benchmarks/results/dryrun/.
+
+Run one cell:   python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh pod
+Run everything: python -m repro.launch.dryrun --all        (spawns subprocesses)
+
+The 512 fake CPU devices exist ONLY in this process — never set the
+XLA_FLAGS override globally.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _log(msg):
+    print(msg, flush=True)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, serve_bits: int = 4,
+             remat: str = "full", out_dir: str | None = None,
+             seq_shard: bool | None = None, profile: str = "tp",
+             tag: str = "") -> dict:
+    os.environ["REPRO_SHARD_PROFILE"] = profile
+    from repro.configs import SHAPES, cell_is_runnable, get_config
+    from repro.dist import sharding as shd
+    from repro.launch import specs as S
+    from repro.launch.hlo_analysis import analyze_hlo, roofline_from_costs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.quant.qat import bits_assignment, policy_for
+    from repro.train.train_step import make_eval_step  # noqa: F401 (import check)
+
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_runnable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.devices.size
+    n_params = S.count_params(model)
+    n_active = S.active_params(cfg, model)
+    if seq_shard is None:
+        seq_shard = shape.seq_len >= 32_768
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = AdamW(lr=3e-4, weight_decay=0.1,
+                        moments="int8" if n_params > 60e9 else "fp32")
+            groups = model.quant_groups(seq_len=shape.seq_len)
+            policy = policy_for(model, default_bits=8)
+            bits_map = {k: jnp.asarray(v)
+                        for k, v in bits_assignment(groups, policy).items()}
+
+            def step(state, batch, bm):
+                from repro.quant.qat import quantize_params
+
+                def loss_fn(p):
+                    qp = quantize_params(p, bm, groups)
+                    return model.loss(qp, batch, remat=remat)
+
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"])
+                new_p, new_o = opt.update(state["params"], grads, state["opt"])
+                return {"params": new_p, "opt": new_o}, loss
+
+            pstruct = S.params_struct(model)
+            ostruct = jax.eval_shape(opt.init, pstruct)
+            state_struct = {"params": pstruct, "opt": ostruct}
+            batch = S.batch_struct(cfg, shape, train=True)
+            st_specs = shd.state_specs(state_struct, mesh)
+            in_sh = (shd.to_named(st_specs, mesh),
+                     shd.to_named(shd.batch_specs(batch, mesh, seq_shard=False), mesh),
+                     None)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=(0,)).lower(
+                state_struct, batch, bits_map)
+            model_flops = 6.0 * n_active * shape.global_batch * shape.seq_len
+
+        elif shape.kind == "prefill":
+            def step(params, batch):
+                logits, _ = model.forward(
+                    params, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                    positions=batch.get("positions"), remat="full")
+                return logits.astype(jnp.bfloat16)
+
+            pstruct = S.params_struct(model)
+            batch = S.batch_struct(cfg, shape, train=False)
+            in_sh = (shd.to_named(shd.param_specs(pstruct, mesh), mesh),
+                     shd.to_named(shd.batch_specs(batch, mesh, seq_shard=seq_shard), mesh))
+            lowered = jax.jit(step, in_shardings=in_sh).lower(pstruct, batch)
+            model_flops = 2.0 * n_active * shape.global_batch * shape.seq_len
+
+        else:  # decode
+            policy = policy_for(model, default_bits=serve_bits)
+            sparams, cache, tokens = S.decode_structs(model, shape, policy)
+
+            def step(sp, c, t):
+                logits, c2 = model.decode_step(sp, c, t)
+                return logits.astype(jnp.bfloat16), c2
+
+            cache_sh = shd.to_named(shd.cache_specs(cache, mesh), mesh)
+            in_sh = (shd.to_named(shd.param_specs(sparams, mesh), mesh),
+                     cache_sh,
+                     shd.to_named(shd.batch_specs(tokens, mesh), mesh))
+            # out cache sharding pinned to the in sharding so donation aliases
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=(None, cache_sh),
+                              donate_argnums=(1,)).lower(sparams, cache, tokens)
+            model_flops = 2.0 * n_active * shape.global_batch * serve_bits / 8.0
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()  # XLA:CPU: while bodies counted ONCE
+    costs = analyze_hlo(compiled.as_text())  # loop-corrected (see hlo_analysis)
+    rl = roofline_from_costs(costs, chips=chips, model_flops=model_flops)
+
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)  # donated in/out overlap
+    mem_d = {
+        "argument_bytes": arg_b, "output_bytes": out_b, "temp_bytes": tmp_b,
+        "alias_bytes": alias_b,
+        "peak_bytes": arg_b + tmp_b + max(out_b - alias_b, 0),
+    }
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "status": "ok", "params": n_params, "active_params": n_active,
+        "profile": profile, "remat": remat, "serve_bits": serve_bits,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d, "roofline": rl.row(),
+        "fits_16g": mem_d["peak_bytes"] < 16e9,
+    }
+    _log(f"[dryrun] {arch} × {shape_name} × {mesh_kind} ({profile}): "
+         f"peak/device={mem_d['peak_bytes']/1e9:.2f} GB "
+         f"flops/chip={rl.flops:.3e} bottleneck={rl.bottleneck} "
+         f"roofline_frac={rl.roofline_fraction:.3f} "
+         f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    _log(f"  memory_analysis: {mem_d}")
+    _log(f"  terms: compute={rl.t_compute*1e3:.1f}ms memory={rl.t_memory*1e3:.1f}ms "
+         f"collective={rl.t_collective*1e3:.1f}ms useful={rl.useful_ratio:.2f}")
+    _log(f"  raw cost_analysis (uncorrected): flops={cost.get('flops'):.3e}")
+    _log(f"  collectives: {costs.coll_summary()}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_kind}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+DEFAULT_PROFILE = {"train": "fsdp", "prefill": "tp", "decode": "tp"}
+
+
+def run_all(meshes=("pod", "multipod"), out_dir=RESULTS_DIR, archs=None,
+            shapes=None, timeout: int = 3600, profile: str | None = None):
+    """Spawn one subprocess per cell (isolates the 512-device client and
+    caps compile-memory growth).  profile=None picks the per-kind default
+    (train cells: fsdp — the layout that fits every arch in 16 GB;
+    serve cells: tp)."""
+    from repro.configs import SHAPES, all_archs, cell_is_runnable
+
+    archs = archs or all_archs()
+    shapes = shapes or list(SHAPES)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            cell_profile = profile or DEFAULT_PROFILE[SHAPES[shape].kind]
+            for mesh in meshes:
+                ok, reason = cell_is_runnable(arch, shape)
+                fn = os.path.join(out_dir, f"{arch}_{shape}_{mesh}.json")
+                if not ok:
+                    os.makedirs(out_dir, exist_ok=True)
+                    with open(fn, "w") as f:
+                        json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                                   "status": "skipped", "reason": reason}, f)
+                    _log(f"[dryrun] SKIP {arch} × {shape}: {reason}")
+                    continue
+                if os.path.exists(fn):
+                    _log(f"[dryrun] cached {arch} × {shape} × {mesh}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--profile", cell_profile, "--out", out_dir]
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=timeout)
+                _log(r.stdout.strip())
+                if r.returncode != 0:
+                    _log(f"[dryrun] FAIL {arch} × {shape} × {mesh} "
+                         f"({time.time()-t0:.0f}s):\n{r.stderr[-3000:]}")
+                    results.append({"arch": arch, "shape": shape, "mesh": mesh,
+                                    "status": "fail"})
+                else:
+                    results.append({"arch": arch, "shape": shape, "mesh": mesh,
+                                    "status": "ok"})
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--profile", default=None, choices=[None, "tp", "tp_sp", "fsdp"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    if args.all:
+        run_all(out_dir=args.out or RESULTS_DIR, profile=args.profile)
+        return
+    run_cell(args.arch, args.shape, args.mesh, serve_bits=args.bits,
+             remat=args.remat, out_dir=args.out, profile=args.profile,
+             tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --bits 4``.
+
+Loads (or initializes) params, packs them at a ReLeQ policy, and serves
+batched greedy decode requests — the production serve loop the decode
+dry-run cells lower.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.policy import QuantPolicy
+from repro.quant.qat import policy_for
+from repro.train.serve import make_decode_step, quantize_for_serving
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--policy-json", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    if args.ckpt_dir:
+        from repro import ckpt as ckpt_lib
+
+        tree, _, step = ckpt_lib.restore(args.ckpt_dir)
+        params = jax.tree.map(jnp.asarray, tree["params"])
+        print(f"restored step {step} from {args.ckpt_dir}")
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+    if args.policy_json:
+        with open(args.policy_json) as f:
+            policy = QuantPolicy.from_json(f.read())
+    else:
+        policy = policy_for(model, default_bits=args.bits)
+    sparams = quantize_for_serving(model, params, policy)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    logits, cache = model.prefill(sparams, tokens=prompts,
+                                  max_len=args.prompt_len + args.gen + 1)
+    dec = make_decode_step(model, donate=False)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    t0 = time.time()
+    toks = [tok]
+    for _ in range(args.gen):
+        logits, cache = dec(sparams, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        toks.append(tok)
+    dt = time.time() - t0
+    print(f"served batch={args.batch} gen={args.gen} at "
+          f"{dt / args.gen * 1e3:.1f} ms/token-step "
+          f"(avg policy {policy.average_bits():.1f} bits)")
+    print("first sequence:", jnp.concatenate(toks, 1)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

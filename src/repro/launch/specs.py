@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the exact pytree of structs the jit'd
+step is lowered against: training batches (tokens/labels — or precomputed
+frontend embeddings for the vlm/audio stub archs), serving caches, packed
+serving params.  Weak-type-correct, shardable, zero bytes allocated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, *, train: bool) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.frontend:  # stub modality frontend: precomputed embeddings
+        out["embeds"] = sds((B, S, cfg.d_model), cfg.dtype)
+    else:
+        out["tokens"] = sds((B, S), jnp.int32)
+    if cfg.rope == "mrope":
+        out["positions"] = sds((3, B, S), jnp.int32)
+    if train:
+        out["labels"] = sds((B, S), jnp.int32)
+    return out
+
+
+def params_struct(model):
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def serving_params_struct(model, policy):
+    from repro.train.serve import quantize_for_serving
+
+    pstruct = params_struct(model)
+    return jax.eval_shape(
+        lambda p: quantize_for_serving(model, p, policy), pstruct)
+
+
+def cache_struct(model, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len=max_len))
+
+
+def decode_structs(model, shape: ShapeConfig, policy):
+    """(serving params, cache, one-token batch) structs for serve_step."""
+    sparams = serving_params_struct(model, policy)
+    cache = cache_struct(model, shape.global_batch, shape.seq_len)
+    # decode against a *full* cache (length = seq_len context)
+    tokens = sds((shape.global_batch, 1), jnp.int32)
+    return sparams, cache, tokens
+
+
+def count_params(model) -> int:
+    import math
+
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(params_struct(model)))
+
+
+def active_params(cfg: ModelConfig, model) -> int:
+    """Per-token active parameters (MoE: routed k of E)."""
+    total = count_params(model)
+    if not cfg.num_experts:
+        return total
+    groups = model.quant_groups()
+    bank = sum(g.n_weights for g in groups if "/moe/" in "/".join(map(str, g.path))
+               or "moe." in g.name)
+    return int(total - bank + bank * cfg.experts_per_token / cfg.num_experts)

@@ -1,0 +1,15 @@
+"""Model zoo: scan-based decoder LM family covering the 10 assigned archs.
+
+All models share one protocol (see :mod:`repro.models.model`):
+
+- ``init(rng) -> params``         pure (usable under ``jax.eval_shape``)
+- ``forward(params, batch) -> logits``  teacher-forced training forward
+- ``loss(params, batch) -> scalar``
+- ``init_cache(batch) -> cache`` / ``decode_step(params, cache, tok) -> ...``
+- ``quant_groups() -> [QuantGroup]``   what ReLeQ's episode walks
+
+Training forward uses ``lax.scan`` over a stacked layer pytree so HLO size
+is depth-independent; the decode path unrolls layers so each layer's packed
+quantized weights specialize to their own bitwidth (DESIGN.md §3).
+"""
+from repro.models.model import build_model, QuantGroup  # noqa: F401

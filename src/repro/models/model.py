@@ -1,0 +1,32 @@
+"""Model protocol + dispatch.  Filled in by transformer.py / rwkv.py etc."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class QuantGroup:
+    """One quantizable weight group = one RL action step (DESIGN.md §5).
+
+    For scan-stacked transformer layers a group is (layer l, matrix name);
+    ``path`` addresses the leaf in the params pytree, ``layer`` the index
+    into its stacked leading axis (None for unstacked leaves like lm_head).
+    ``n_weights``/``n_macs`` feed the paper's State-of-Quantization metric.
+    """
+
+    name: str
+    path: tuple[str, ...]
+    layer: int | None
+    shape: tuple[int, ...]
+    n_weights: int
+    n_macs: int
+
+
+def build_model(cfg):
+    """Config -> model object (family dispatch)."""
+    from repro.models.transformer import TransformerLM
+    from repro.models.rwkv import RWKV6LM
+
+    if cfg.family == "ssm":
+        return RWKV6LM(cfg)
+    return TransformerLM(cfg)

@@ -1,0 +1,343 @@
+"""RWKV6 ("Finch"): attention-free LM with data-dependent diagonal decay.
+
+Per head (dims K=V=head_dim) the wkv recurrence is
+
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    o_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+
+with w_t = exp(-exp(w0 + tanh(x W_a) W_b)) ∈ (0,1) *input-dependent* (the
+RWKV6 novelty).  We evaluate it chunk-parallel: within a chunk of length c
+the pairwise decay products D[t,i,d] = exp(L_{t-1,d} − L_{i,d}) (L = cumsum
+of log-decay) are ≤ 1 by construction — no overflow — and cost O(c²·K) per
+head; across chunks a ``lax.scan`` carries the (K, V) state.  c defaults to
+16 to bound the (B, c, c, H, K) pairwise tensor (DESIGN.md §5).
+
+Quantizable groups per layer: the five time-mix projections + output, and
+the three channel-mix matrices.  The decay LoRA (W_a, W_b), bonus u, and
+token-shift mixes stay fp — tiny and sensitivity-critical, the analogue of
+the paper keeping first/last CNN layers at 8 bits.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.quant.pack import QDQ
+from repro.quant.wrpn import fake_quant as wrpn_fake_quant
+from repro.models.common import (
+    apply_linear,
+    batch_axes,
+    constrain,
+    dense_init,
+    embed_init,
+    model_axis,
+    readout_axes,
+    rms_norm,
+    seq_axis,
+)
+from repro.models.model import QuantGroup
+
+
+def wkv6_chunked(r, k, v, logw, u, state0, chunk: int = 16):
+    """r/k/v/logw: (B, S, H, K); u: (H, K); state0: (B, H, K, V).
+
+    Returns (out (B,S,H,V), state (B,H,K,V)).  fp32 throughout.
+    """
+    B, S, H, K = r.shape
+    c = min(chunk, S)
+    Sp = -(-S // c) * c
+    pad = Sp - S
+
+    def pad_t(a, val=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=val)
+
+    rp, kp, vp = pad_t(r), pad_t(k), pad_t(v)
+    lwp = pad_t(logw)  # padded decay 0 (=no decay) is harmless: k,v padded 0
+    nc = Sp // c
+
+    def chunks(a):
+        return jnp.moveaxis(a.reshape(B, nc, c, H, K), 1, 0)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)  # i < t
+
+    # recompute the pairwise-decay tile in the backward pass instead of
+    # letting scan save (nc, c, c, H, K) stacked residuals — 6.6 TB/chip of
+    # HBM traffic at train_4k otherwise (EXPERIMENTS.md §Perf)
+    @jax.checkpoint
+    def step(state, inp):
+        rc, kc, vc, lwc = inp                     # (B,c,H,K)
+        L = jnp.cumsum(lwc, axis=1)               # inclusive
+        Lprev = L - lwc                           # exclusive (L_{t-1})
+        q = rc * jnp.exp(Lprev)
+        out_inter = jnp.einsum("bchk,bhkv->bchv", q, state)
+        diff = Lprev[:, :, None] - L[:, None]     # (B,t,i,H,K)
+        diff = jnp.where(tri[None, :, :, None, None], diff, -jnp.inf)
+        Dm = jnp.exp(diff)
+        A = jnp.einsum("bthk,bihk,btihk->btih", rc, kc, Dm)   # (B,c,c,H)
+        Adiag = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        A = A + jnp.eye(c)[None, :, :, None] * Adiag[:, :, None, :]
+        out_intra = jnp.einsum("btih,bihv->bthv", A, vc)
+        L_last = L[:, -1]                         # (B,H,K)
+        kmod = kc * jnp.exp(L_last[:, None] - L)
+        state = state * jnp.exp(L_last)[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", kmod, vc)
+        return state, out_inter + out_intra
+
+    state, outs = jax.lax.scan(
+        step, state0.astype(jnp.float32),
+        (chunks(rp).astype(jnp.float32), chunks(kp).astype(jnp.float32),
+         chunks(vp).astype(jnp.float32), chunks(lwp).astype(jnp.float32)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sp, H, K)[:, :S]
+    return out, state
+
+
+def wkv6_step(r, k, v, logw, u, state):
+    """Single token: r/k/v/logw (B,H,K); state (B,H,K,V)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = state * jnp.exp(logw)[..., None] + kv
+    return o, state
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.d_model % cfg.hd:
+            raise ValueError("d_model must divide head_dim")
+        self.H = cfg.d_model // cfg.hd
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, key, dtype):
+        cfg = self.cfg
+        D, F, R = cfg.d_model, cfg.d_ff, cfg.wkv_lora_rank
+        ks = jax.random.split(key, 10)
+        mu = lambda k: jax.random.uniform(k, (D,), jnp.float32)
+        return {
+            "ln1": jnp.ones((D,), jnp.float32),
+            "ln2": jnp.ones((D,), jnp.float32),
+            "tm": {
+                "mu_r": mu(ks[0]), "mu_k": mu(jax.random.fold_in(ks[0], 1)),
+                "mu_v": mu(jax.random.fold_in(ks[0], 2)),
+                "mu_g": mu(jax.random.fold_in(ks[0], 3)),
+                "mu_w": mu(jax.random.fold_in(ks[0], 4)),
+                "wr": dense_init(ks[1], D, D, dtype),
+                "wk": dense_init(ks[2], D, D, dtype),
+                "wv": dense_init(ks[3], D, D, dtype),
+                "wg": dense_init(ks[4], D, D, dtype),
+                "wo": dense_init(ks[5], D, D, dtype),
+                "w0": jnp.full((D,), 1.0, jnp.float32),   # exp(-exp(1)) ≈ .066 decay/step
+                "wa": dense_init(ks[6], D, R, jnp.float32),
+                "wb": (jax.random.normal(jax.random.fold_in(ks[6], 1), (R, D), jnp.float32)
+                       * 0.01).astype(jnp.float32),
+                "u": jnp.zeros((self.H, self.cfg.hd), jnp.float32),
+                "gn": jnp.ones((D,), jnp.float32),
+            },
+            "cm": {
+                "mu_k": mu(ks[7]), "mu_r": mu(jax.random.fold_in(ks[7], 1)),
+                "wk": dense_init(ks[8], D, F, dtype),
+                "wv": dense_init(ks[9], F, D, dtype, scale=F ** -0.5),
+                "wr": dense_init(jax.random.fold_in(ks[9], 1), D, D, dtype),
+            },
+        }
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k_emb, k_head, k_blocks = jax.random.split(rng, 3)
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        blocks = jax.vmap(lambda k: self._init_layer(k, dtype))(keys)
+        return {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "blocks": blocks,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype),
+        }
+
+    # ------------------------------------------------------------- sublayers
+    def _decay(self, xw, tm):
+        lw = tm["w0"] + jnp.tanh(xw.astype(jnp.float32) @ tm["wa"]) @ tm["wb"]
+        return -jnp.exp(jnp.clip(lw, -8.0, 6.0))  # log-decay in (-e^6, 0)
+
+    def _time_mix(self, x, xprev, p, state0=None):
+        """x: (B,S,D); xprev: previous-token x (B,S,D).  Returns (out, state)."""
+        cfg, H, hd = self.cfg, self.H, self.cfg.hd
+        B, S, D = x.shape
+        tm = p["tm"]
+        lerp = lambda m: x + (xprev - x) * m
+        r = apply_linear(lerp(tm["mu_r"]), tm["wr"]).reshape(B, S, H, hd)
+        k = apply_linear(lerp(tm["mu_k"]), tm["wk"]).reshape(B, S, H, hd)
+        v = apply_linear(lerp(tm["mu_v"]), tm["wv"]).reshape(B, S, H, hd)
+        g = jax.nn.silu(apply_linear(lerp(tm["mu_g"]), tm["wg"]).astype(jnp.float32))
+        logw = self._decay(lerp(tm["mu_w"]), tm).reshape(B, S, H, hd)
+        if state0 is None:
+            state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        if S == 1:
+            o, state = wkv6_step(
+                r[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+                v[:, 0].astype(jnp.float32), logw[:, 0], tm["u"], state0)
+            o = o[:, None]
+        else:
+            o, state = wkv6_chunked(r, k, v, logw, tm["u"], state0, cfg.chunk_size)
+        o = o.reshape(B, S, D)
+        # per-head group norm
+        oh = o.reshape(B, S, H, hd)
+        mean = jnp.mean(oh, -1, keepdims=True)
+        var = jnp.var(oh, -1, keepdims=True)
+        o = ((oh - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D) * tm["gn"]
+        o = (o * g).astype(x.dtype)
+        return apply_linear(o, tm["wo"]), state
+
+    def _channel_mix(self, x, xprev, p):
+        cm = p["cm"]
+        lerp = lambda m: x + (xprev - x) * m
+        kx = apply_linear(lerp(cm["mu_k"]), cm["wk"])
+        kx = jnp.square(jax.nn.relu(kx.astype(jnp.float32))).astype(x.dtype)
+        val = apply_linear(kx, cm["wv"])
+        gate = jax.nn.sigmoid(apply_linear(lerp(cm["mu_r"]), cm["wr"]).astype(jnp.float32))
+        return (gate * val.astype(jnp.float32)).astype(x.dtype)
+
+    def _shift(self, x, last=None):
+        """Previous-token stream; ``last`` (B,1,D) = final token of prefix."""
+        init = jnp.zeros_like(x[:, :1]) if last is None else last.astype(x.dtype)
+        return jnp.concatenate([init, x[:, :-1]], axis=1)
+
+    def _layer(self, x, p, *, tm_state=None, x_tm_last=None, x_cm_last=None):
+        h1 = rms_norm(x, p["ln1"], self.cfg.norm_eps)
+        tm_out, tm_state = self._time_mix(h1, self._shift(h1, x_tm_last), p, tm_state)
+        x = x + constrain(tm_out, batch_axes(), seq_axis(), None)
+        h2 = rms_norm(x, p["ln2"], self.cfg.norm_eps)
+        cm_out = self._channel_mix(h2, self._shift(h2, x_cm_last), p)
+        x = x + constrain(cm_out, batch_axes(), seq_axis(), None)
+        return x, (tm_state, h1[:, -1:], h2[:, -1:])
+
+    # ------------------------------------------------------------- forwards
+    def forward(self, params, tokens=None, embeds=None, positions=None,
+                remat: str = "none", return_hidden: bool = False):
+        cfg = self.cfg
+        emb = params["embed"]
+        if isinstance(emb, QDQ):
+            emb = wrpn_fake_quant(emb.w, emb.bits, axis=0)
+        h = embeds.astype(jnp.dtype(cfg.dtype)) if embeds is not None else jnp.take(emb, tokens, axis=0)
+        h = constrain(h, batch_axes(), None, None)
+
+        def block(h, p):
+            h, _ = self._layer(h, p)
+            return h, jnp.asarray(0.0, jnp.float32)
+
+        if remat == "full":
+            block = jax.checkpoint(block)
+        elif remat == "dots":
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        h, _ = jax.lax.scan(block, h, params["blocks"])
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if return_hidden:
+            return h, jnp.asarray(0.0, jnp.float32)
+        return self._readout(params, h), jnp.asarray(0.0, jnp.float32)
+
+    def _readout(self, params, h):
+        h = constrain(h, readout_axes(), None, None)
+        logits = apply_linear(h, params["lm_head"]).astype(jnp.float32)
+        return constrain(logits, readout_axes(), None, "model")
+
+    def loss(self, params, batch, remat: str = "none"):
+        from repro.models.common import chunked_ce
+
+        h, _ = self.forward(params, tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"), remat=remat,
+                            return_hidden=True)
+        nll, z2 = chunked_ce(lambda hc: self._readout(params, hc),
+                             h, batch["labels"])
+        return nll + 1e-4 * z2, {"nll": nll, "aux": 0.0}
+
+    # --------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        L, D = cfg.num_layers, cfg.d_model
+        return {
+            "wkv": jnp.zeros((L, batch, self.H, cfg.hd, cfg.hd), jnp.float32),
+            "x_tm": jnp.zeros((L, batch, 1, D), dtype),
+            "x_cm": jnp.zeros((L, batch, 1, D), dtype),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def _layer_slice(self, params, l):
+        blocks = params["blocks"]
+        if isinstance(blocks, list):
+            return blocks[l]
+        return jax.tree.map(lambda a: a[l], blocks)
+
+    def decode_step(self, params, cache, tokens, positions=None):
+        cfg = self.cfg
+        cache = dict(cache)
+        emb = params["embed"]
+        if isinstance(emb, QDQ):
+            emb = wrpn_fake_quant(emb.w, emb.bits, axis=0)
+        h = jnp.take(emb, tokens, axis=0)  # (B,1,D)
+        for l in range(cfg.num_layers):
+            p = self._layer_slice(params, l)
+            h, (st, xtm, xcm) = self._layer(
+                h, p, tm_state=cache["wkv"][l],
+                x_tm_last=cache["x_tm"][l], x_cm_last=cache["x_cm"][l])
+            cache["wkv"] = cache["wkv"].at[l].set(st)
+            cache["x_tm"] = cache["x_tm"].at[l].set(xtm.astype(cache["x_tm"].dtype))
+            cache["x_cm"] = cache["x_cm"].at[l].set(xcm.astype(cache["x_cm"].dtype))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = apply_linear(h, params["lm_head"]).astype(jnp.float32)
+        cache["length"] = cache["length"] + 1
+        return logits, cache
+
+    def prefill(self, params, tokens=None, embeds=None, max_len: int | None = None):
+        """Scan-based prefill collecting per-layer states (max_len unused:
+        the wkv state is O(1) in sequence length)."""
+        cfg = self.cfg
+        emb = params["embed"]
+        h = embeds.astype(jnp.dtype(cfg.dtype)) if embeds is not None else jnp.take(emb, tokens, axis=0)
+        B, S, _ = h.shape
+
+        def block(h, p):
+            h, (st, xtm, xcm) = self._layer(h, p)
+            return h, (st, xtm, xcm)
+
+        h, (sts, xtms, xcms) = jax.lax.scan(block, h, params["blocks"])
+        hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = apply_linear(hn[:, -1:], params["lm_head"]).astype(jnp.float32)
+        cache = {
+            "wkv": sts, "x_tm": xtms.astype(jnp.dtype(cfg.dtype)),
+            "x_cm": xcms.astype(jnp.dtype(cfg.dtype)),
+            "length": jnp.full((B,), S, jnp.int32),
+        }
+        return logits, cache
+
+    # ------------------------------------------------------------ quant API
+    def quant_groups(self, seq_len: int = 4096) -> list[QuantGroup]:
+        cfg = self.cfg
+        D, F = cfg.d_model, cfg.d_ff
+        groups: list[QuantGroup] = []
+
+        def add(name, path, layer, shape, macs_per_token):
+            groups.append(QuantGroup(name, path, layer, tuple(shape),
+                                     math.prod(shape), int(macs_per_token * seq_len)))
+
+        add("embed", ("embed",), None, (cfg.vocab_size, D), 0)
+        for l in range(cfg.num_layers):
+            pre, base = f"L{l:02d}.", ("blocks",)
+            for m in ("wr", "wk", "wv", "wg", "wo"):
+                add(pre + f"tm.{m}", base + ("tm", m), l, (D, D), D * D)
+            add(pre + "cm.wk", base + ("cm", "wk"), l, (D, F), D * F)
+            add(pre + "cm.wv", base + ("cm", "wv"), l, (F, D), D * F)
+            add(pre + "cm.wr", base + ("cm", "wr"), l, (D, D), D * D)
+        add("lm_head", ("lm_head",), None, (D, cfg.vocab_size), D * cfg.vocab_size)
+        return groups
+
+    def frozen_bits(self) -> dict[str, int]:
+        out = {}
+        for g in self.quant_groups():
+            if any(g.name.startswith(p) or p in g.name for p in self.cfg.frozen_at_8):
+                out[g.name] = 8
+        return out

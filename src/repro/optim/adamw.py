@@ -1,0 +1,124 @@
+"""AdamW from scratch (no optax offline), with optional int8 moments.
+
+The int8 variant stores both Adam moments as block-wise int8 ``QTensor``s
+(quant/int8_opt.py) — 4× less state memory, which is what lets the
+llama4-maverick-400b optimizer state fit a 256-chip v5e pod (DESIGN.md §4).
+Moments are dequantized, updated, and requantized inside the jit'd step;
+the requantization error acts like tiny gradient noise (8-bit Adam).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.int8_opt import (
+    QTensor,
+    dequantize_state,
+    dequantize_state_sq,
+    quantize_state,
+    quantize_state_sq,
+)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, base_lr * (1 - t))
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: object = 1e-3                 # float or schedule fn(step)->lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = 1.0
+    moments: str = "fp32"             # fp32 | int8
+    sequential: bool | None = None    # barrier-chain per-leaf updates
+    # (default: True for int8 moments — otherwise the scheduler may hold
+    # every leaf's dequantized f32 moment live at once: ~25 GB of transient
+    # at llama4-400B scale; EXPERIMENTS.md §Perf)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def init(self, params):
+        def zeros(q):
+            z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            return jax.tree.map(q, z) if self.moments == "int8" else z
+        return {"m": zeros(quantize_state), "v": zeros(quantize_state_sq),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, opt):
+        step = opt["step"] + 1
+        lr = self._lr(step)
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        int8 = self.moments == "int8"
+        if int8:
+            deq_m, deq_v = dequantize_state, dequantize_state_sq
+            req_m, req_v = quantize_state, quantize_state_sq
+        else:
+            deq_m = deq_v = req_m = req_v = lambda t: t
+        c1 = 1 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def leaf_update(p, g, mm_q, vv_q):
+            gf = g.astype(jnp.float32)
+            mm = self.b1 * deq_m(mm_q) + (1 - self.b1) * gf
+            vv = self.b2 * deq_v(vv_q) + (1 - self.b2) * jnp.square(gf)
+            u = (mm / c1) / (jnp.sqrt(vv / c2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, req_m(mm), req_v(vv)
+
+        sequential = self.sequential if self.sequential is not None else int8
+        is_q = lambda x: isinstance(x, QTensor)
+        p_leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        m_leaves = jax.tree.leaves(opt["m"], is_leaf=is_q)
+        v_leaves = jax.tree.leaves(opt["v"], is_leaf=is_q)
+        new_p, new_m, new_v = [], [], []
+        gate = None
+        for p, g, mm, vv in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+            if sequential and gate is not None:
+                # barrier: leaf i+1's update may not start before leaf i's
+                # f32 transients die — bounds peak at ~one leaf, not the tree
+                p, gate = jax.lax.optimization_barrier((p, gate))
+            np_, nm_, nv_ = leaf_update(p, g, mm, vv)
+            gate = np_
+            new_p.append(np_)
+            new_m.append(nm_)
+            new_v.append(nv_)
+        m_def = jax.tree_util.tree_structure(opt["m"], is_leaf=is_q)
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                {"m": jax.tree_util.tree_unflatten(m_def, new_m),
+                 "v": jax.tree_util.tree_unflatten(m_def, new_v),
+                 "step": step})

@@ -1,0 +1,40 @@
+"""Quantization substrate: WRPN quantizer, bitwidth policies, bitplane packing.
+
+This package implements the quantization machinery that ReLeQ (core/) drives:
+
+- :mod:`repro.quant.wrpn` — the paper's quantization technique (WRPN
+  mid-tread, Eq. 1 of the paper) with a straight-through estimator so it can
+  sit inside a QAT training step.
+- :mod:`repro.quant.policy` — ``QuantPolicy``: the per-weight-group bitwidth
+  assignment that the RL agent produces and every other layer consumes.
+- :mod:`repro.quant.pack` — bitplane packing for the serving path (memory
+  traffic scales with bitwidth; see DESIGN.md §3).
+- :mod:`repro.quant.int8_opt` — block-wise int8 quantization of optimizer
+  moments (beyond-paper: needed to fit 400B-scale optimizer state).
+"""
+from repro.quant.wrpn import (
+    fake_quant,
+    fake_quant_ste,
+    quantize_to_int,
+    dequantize_from_int,
+    quant_error,
+)
+from repro.quant.policy import QuantPolicy, BITWIDTH_CHOICES
+from repro.quant.pack import (
+    pack_bitplanes,
+    unpack_bitplanes,
+    packed_nbytes,
+)
+
+__all__ = [
+    "fake_quant",
+    "fake_quant_ste",
+    "quantize_to_int",
+    "dequantize_from_int",
+    "quant_error",
+    "QuantPolicy",
+    "BITWIDTH_CHOICES",
+    "pack_bitplanes",
+    "unpack_bitplanes",
+    "packed_nbytes",
+]

@@ -1,0 +1,112 @@
+"""Block-wise int8 quantization of optimizer moments (beyond-paper).
+
+Rationale (DESIGN.md §4): Adam on llama4-maverick-400b needs ~3.2 TB of
+moment state in fp32 — it does not fit a 256×16 GB pod even fully sharded.
+Storing both moments in block-wise int8 (dynamic per-block absmax scale,
+block = 256 contiguous elements) cuts moment memory 4× at negligible quality
+cost (the same scheme as 8-bit Adam, Dettmers et al.), and is thematically
+the paper's own insight applied to the *optimizer*: bits you don't need are
+bandwidth and capacity you get back.
+
+The representation is a pytree-of-arrays (codes + scales) so it checkpoints
+and reshards exactly like any other state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass
+class QTensor:
+    """Block-quantized tensor: int8 codes + float32 per-block scales.
+
+    ``shape`` (the original tensor shape) is pytree aux data, so QTensor
+    jits/vmaps/checkpoints like any array pair.
+    """
+
+    codes: jax.Array  # fp8 codes, (nblocks, BLOCK)
+    scale: jax.Array  # float32, (nblocks,)
+    shape: tuple      # original shape (static aux)
+
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        return ((k("codes"), self.codes), (k("scale"), self.scale)), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def nbytes_effective(self) -> int:
+        return self.codes.size + 4 * self.scale.size
+
+
+_F8 = jnp.float8_e4m3fn
+_F8_MAX = 448.0  # finfo max; per-block scale maps blockmax here
+
+
+def _block_for(last_dim: int) -> int:
+    b = BLOCK
+    while b > 1 and last_dim % b:
+        b //= 2
+    return b
+
+
+def quantize_state(x: jax.Array) -> QTensor | jax.Array:
+    """float tensor -> block-wise 8-bit QTensor.
+
+    Codes are float8 e4m3 (dynamic/exponent quantization a la 8-bit Adam):
+    linear int8 zeroes out the small entries of Adam's second moment inside
+    a block (ratio < 1/127) and the rsqrt then explodes — fp8's ~2^18
+    in-block dynamic range keeps tiny v entries alive.
+
+    Blocks run along the LAST axis only — ``(…, F) -> (…, F/B, B)`` — so
+    the leading dims keep their GSPMD sharding.  (A flat reshape replicates
+    the tensor under SPMD: "involuntary full rematerialization", 515 GB of
+    gathers on the llama4 expert banks; EXPERIMENTS.md §Perf.)  Leaves whose
+    last dim resists blocking (<8) stay fp32 — tiny in practice.
+    """
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    b = _block_for(last)
+    if b < 8 or x.ndim == 0:
+        return x  # not worth quantizing (scale overhead / scalars)
+    blocks = x.astype(jnp.float32).reshape(*shape[:-1], last // b, b)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1), 1e-20)
+    codes = (blocks / scale[..., None] * _F8_MAX).astype(_F8)
+    return QTensor(codes, scale, shape)
+
+
+def dequantize_state(q) -> jax.Array:
+    if not isinstance(q, QTensor):
+        return q
+    blocks = (q.codes.astype(jnp.float32) / _F8_MAX) * q.scale[..., None]
+    return blocks.reshape(q.shape)
+
+
+def quantize_state_sq(x: jax.Array) -> QTensor:
+    """Sqrt-space quantization for Adam's second moment: v's dynamic range
+    is the SQUARE of the gradients' (ratio 1e-3 in g -> 1e-6 in v), which
+    under-runs fp8 subnormals within a block and dequantizes to 0 — the
+    rsqrt then explodes.  Storing sqrt(v) halves the log-range."""
+    return quantize_state(jnp.sqrt(jnp.maximum(x, 0.0)))
+
+
+def dequantize_state_sq(q: QTensor) -> jax.Array:
+    return jnp.square(dequantize_state(q))
+
+
+def tree_quantize(tree):
+    return jax.tree.map(quantize_state, tree)
+
+
+def tree_dequantize(tree):
+    return jax.tree.map(
+        dequantize_state, tree, is_leaf=lambda x: isinstance(x, QTensor)
+    )

@@ -1,0 +1,144 @@
+"""Bitplane packing of quantized weights (serving path).
+
+The TPU adaptation of the paper's bit-serial execution (DESIGN.md §3): a
+``k``-bit weight matrix is stored as ``k`` binary planes, each packed 8 rows
+per byte along the contraction axis.  HBM traffic then scales with ``k`` —
+the property Stripes gets from bit-serial ALUs.
+
+Layout
+------
+Given codes ``c ∈ [-(n), +n]`` with ``n = 2^(k-1) - 1`` for a ``(K, N)``
+matrix, we store the *shifted unsigned* codes ``u = c + n ∈ [0, 2n]`` which
+need exactly ``k`` bits.  Plane ``b`` holds bit ``b`` of ``u``.  Packed
+buffer shape: ``(k, K//8, N) uint8`` — byte ``[b, j, :]`` holds rows
+``8j..8j+7`` of plane ``b`` (row ``8j+i`` in bit ``i``).  ``N`` (the
+non-contracted / output axis) stays minor-most so TP sharding of the packed
+buffer divides ``N`` exactly like the parent matrix.
+
+Reconstruction:  ``W = (Σ_b 2^b · plane_b − n) / n · scale``
+Bit-serial GEMM: ``x @ W = (Σ_b 2^b (x @ plane_b) − n · rowsum(x)) / n · scale``
+(the offset is a rank-1 correction computed once per activation tile).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass
+class Packed:
+    """Bitplane-packed weight: planes (bits, K//8, N) u8 (+E axis for expert
+    banks), per-column scale, and STATIC bits (pytree aux — it determines
+    buffer shapes and kernel specialization)."""
+
+    planes: jax.Array
+    scale: jax.Array
+    bits: int
+
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        return ((k("planes"), self.planes), (k("scale"), self.scale)), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass
+class QDQ:
+    """Dense weight tagged for quantize-dequantize at lookup (embeddings:
+    a gather, not a matmul — packing buys no traffic there)."""
+
+    w: jax.Array
+    bits: int
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("w"), self.w),), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def packed_nbytes(K: int, N: int, bits: int) -> int:
+    """Bytes of the packed buffer for a (K, N) matrix at ``bits``."""
+    return bits * ((K + 7) // 8) * N
+
+
+def _check_k(K: int):
+    if K % 8 != 0:
+        raise ValueError(f"contraction dim {K} must be a multiple of 8 (pad first)")
+
+
+def _check_bits(bits: int):
+    # mid-tread ternary (k=1: {-1,0,1}) needs 2 planes — pack at >= 2 bits.
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bitplane packing supports 2..8 bits, got {bits}")
+
+
+def pack_bitplanes(codes, bits: int):
+    """Pack signed codes (K, N) int -> (bits, K//8, N) uint8 planes.
+
+    ``codes`` must lie in ``[-(2^(bits-1)-1), 2^(bits-1)-1]``.
+    """
+    codes = jnp.asarray(codes)
+    K, N = codes.shape
+    _check_k(K)
+    _check_bits(bits)
+    n = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    u = (codes.astype(jnp.int32) + n).astype(jnp.uint32)  # [0, 2n] needs `bits` bits
+    # (bits, K, N) binary planes
+    planes = (u[None, :, :] >> jnp.arange(bits, dtype=jnp.uint32)[:, None, None]) & 1
+    # pack 8 consecutive K-rows into one byte
+    planes = planes.reshape(bits, K // 8, 8, N).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))[None, None, :, None]
+    return jnp.sum(planes * weights, axis=2, dtype=jnp.uint8)
+
+
+def unpack_bitplanes(packed, bits: int):
+    """Inverse: (bits, K//8, N) uint8 -> signed codes (K, N) int32."""
+    packed = jnp.asarray(packed)
+    b, K8, N = packed.shape
+    if b != bits:
+        raise ValueError(f"packed has {b} planes, expected {bits}")
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, None, :, None]
+    bit = (packed[:, :, None, :] >> shifts) & 1  # (bits, K//8, 8, N)
+    bit = bit.reshape(bits, K8 * 8, N).astype(jnp.int32)
+    u = jnp.sum(bit << jnp.arange(bits, dtype=jnp.int32)[:, None, None], axis=0)
+    n = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    return u - n
+
+
+def pack_weight(w, bits: int):
+    """Convenience: float (K, N) weight -> (packed_planes, scale per column).
+
+    Returns ``(packed uint8 (bits, K//8, N), scale float32 (1, N))``.
+    Per-output-channel scales (axis=0 reduction) — finer than the paper's
+    per-tensor scale, strictly better accuracy at identical storage O(N).
+    """
+    from repro.quant.wrpn import quantize_to_int
+
+    w = jnp.asarray(w)
+    codes, scale = quantize_to_int(w, bits, axis=0)
+    return pack_bitplanes(codes, bits), scale
+
+
+def dequant_packed(packed, scale, bits: int):
+    """Reconstruct float32 weights from packed planes + per-column scale."""
+    n = float(2 ** (bits - 1) - 1) if bits > 1 else 1.0
+    codes = unpack_bitplanes(packed, bits)
+    return codes.astype(jnp.float32) / n * scale
+
+
+def pad_contraction_to_8(w: np.ndarray) -> np.ndarray:
+    """Zero-pad axis 0 (contraction) up to a multiple of 8."""
+    K = w.shape[0]
+    pad = (-K) % 8
+    if pad == 0:
+        return w
+    return np.pad(w, [(0, pad)] + [(0, 0)] * (w.ndim - 1))

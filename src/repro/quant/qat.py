@@ -1,0 +1,107 @@
+"""QAT parameter transform: apply the WRPN STE fake-quant to every
+quantizable group at its policy bitwidth — with bitwidths entering the jit'd
+step as DATA, so one executable serves every ReLeQ policy candidate.
+
+Paths are string keys ``"blocks/0/attn/wq"``; leaves with a stacked layer
+axis get a per-layer bits vector and are vmapped (nested vmap for expert
+banks), so the scan-based forward sees per-layer heterogeneous bitwidths at
+zero HLO cost.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.policy import QuantPolicy
+from repro.quant.wrpn import FP_BITS, fake_quant_ste
+
+
+def path_key(path: tuple) -> str:
+    return "/".join(str(p) for p in path)
+
+
+def get_by_path(tree, path: tuple):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def set_by_path(tree, path: tuple, value):
+    """Functional set returning a shallow-copied tree along the path."""
+    if not path:
+        return value
+    head, rest = path[0], path[1:]
+    if isinstance(tree, list):
+        new = list(tree)
+    else:
+        new = dict(tree)
+    new[head] = set_by_path(tree[head], rest, value)
+    return new
+
+
+def bits_assignment(groups, policy: QuantPolicy) -> dict[str, np.ndarray]:
+    """QuantPolicy -> {path_key: int32 () or (L_stack,) array}."""
+    per_path: dict[tuple, dict | int] = {}
+    for g in groups:
+        b = policy.get(g.name)
+        if g.layer is None:
+            per_path[g.path] = b
+        else:
+            per_path.setdefault(g.path, {})[g.layer] = b
+    out = {}
+    for path, v in per_path.items():
+        if isinstance(v, dict):
+            L = max(v) + 1
+            arr = np.full((L,), FP_BITS, np.int32)
+            for i, b in v.items():
+                arr[i] = b
+            out[path_key(path)] = arr
+        else:
+            out[path_key(path)] = np.int32(v)
+    return out
+
+
+def _paths_index(groups):
+    """path_key -> path tuple (stable order)."""
+    return {path_key(g.path): g.path for g in groups}
+
+
+def _qdq(leaf: jax.Array, bits: jax.Array) -> jax.Array:
+    """STE fake-quant with the right vmap nesting for this leaf's rank.
+
+    Scales are per output column (axis=0 of each 2-D matrix) — exactly the
+    codes the bitplane serving path packs, so there is no train/serve gap.
+    """
+    fq = lambda w, b: fake_quant_ste(w, b, axis=0)
+    if bits.ndim == 0:
+        if leaf.ndim == 3:  # unstacked expert bank (E, D, F): per-expert scale
+            return jax.vmap(lambda w: fq(w, bits))(leaf)
+        return fq(leaf, bits)
+    # stacked (L, ...) with per-layer bits
+    if leaf.ndim == 4:  # (L, E, D, F) expert bank: per-(layer, expert) scale
+        return jax.vmap(lambda w, b: jax.vmap(lambda we: fq(we, b))(w))(leaf, bits)
+    return jax.vmap(fq)(leaf, bits)
+
+
+def quantize_params(params, bits_map: dict[str, jax.Array], groups):
+    """Return params with every group's leaf QDQ'd at its bitwidth."""
+    idx = _paths_index(groups)
+    new = params
+    for key, bits in bits_map.items():
+        path = idx[key]
+        leaf = get_by_path(params, path)
+        new = set_by_path(new, path, _qdq(leaf, jnp.asarray(bits)))
+    return new
+
+
+def policy_for(model, default_bits: int = 8) -> QuantPolicy:
+    """Fresh all-``default_bits`` policy with the model's frozen groups."""
+    groups = model.quant_groups()
+    return QuantPolicy(
+        tuple(g.name for g in groups),
+        {g.name: default_bits for g in groups},
+        default_bits=default_bits,
+        frozen=model.frozen_bits(),
+    )

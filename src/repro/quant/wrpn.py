@@ -1,0 +1,128 @@
+"""WRPN mid-tread quantizer (the paper's Eq. 1) with straight-through grads.
+
+The paper (§4.2) adopts the technique of WRPN (Mishra et al., ICLR'18):
+
+    weights are first scaled and clipped to the (-1.0, 1.0) range and
+    quantized as per
+
+        w_q = round((2^(k-1) - 1) * w_f) / (2^(k-1) - 1)
+
+    where ``k`` is the bitwidth, of which ``k-1`` bits encode magnitude and
+    one bit encodes sign.  Mid-tread style: zero IS a representable level.
+
+Scaling convention: WRPN assumes weights already live in (-1, 1).  For
+arbitrary pre-trained tensors we scale by ``max|w|`` per tensor (or per
+output channel), quantize in the unit box, and scale back.  The scale is a
+*dynamic* function of the weights during QAT (recomputed each step, cheap)
+and is frozen into the packed representation at serving time.
+
+Everything here is pure jnp and differentiable-by-construction (STE), so it
+can be vmapped/pjit'd and used inside ``lax.scan`` layer stacks.  The Pallas
+kernel in :mod:`repro.kernels.fake_quant` implements the same math tiled for
+VMEM; :func:`fake_quant` is its oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Bitwidth >= FP_BITS means "leave in full precision".
+FP_BITS = 32
+
+
+def _levels(bits: jax.Array | int) -> jax.Array:
+    """Number of positive quantization steps: 2^(k-1) - 1 (one bit = sign)."""
+    bits = jnp.asarray(bits, dtype=jnp.float32)
+    return jnp.maximum(2.0 ** (bits - 1.0) - 1.0, 1.0)
+
+
+def tensor_scale(w: jax.Array, axis=None, eps: float = 1e-8) -> jax.Array:
+    """max|w| scale so w/scale ∈ [-1, 1].  axis=None → per-tensor."""
+    s = jnp.max(jnp.abs(w), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(s, eps).astype(jnp.float32)
+
+
+def fake_quant(
+    w: jax.Array,
+    bits: jax.Array | int,
+    scale: jax.Array | None = None,
+    axis=None,
+) -> jax.Array:
+    """Quantize-dequantize (no STE — raw, non-differentiable at steps).
+
+    ``bits`` may be a traced scalar (so a *batch of bitwidth policies* can be
+    fed as data — that is what lets vectorized ReLeQ environments share one
+    executable, DESIGN.md §4).  ``bits >= FP_BITS`` returns ``w`` unchanged.
+    """
+    w = jnp.asarray(w)
+    if scale is None:
+        scale = tensor_scale(w, axis=axis)
+    n = _levels(bits)
+    wc = jnp.clip(w / scale, -1.0, 1.0)
+    wq = jnp.round(wc * n) / n * scale
+    is_fp = jnp.asarray(bits, dtype=jnp.int32) >= FP_BITS
+    return jnp.where(is_fp, w, wq.astype(w.dtype))
+
+
+@jax.custom_vjp
+def _fq_ste(w: jax.Array, bits: jax.Array, scale: jax.Array) -> jax.Array:
+    return fake_quant(w, bits, scale=scale)
+
+
+def _fq_fwd(w, bits, scale):
+    return fake_quant(w, bits, scale=scale), (w, scale)
+
+
+def _fq_bwd(res, g):
+    w, scale = res
+    inside = (jnp.abs(w) <= scale).astype(g.dtype)
+    return (g * inside, None, None)
+
+
+_fq_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_ste(w: jax.Array, bits: jax.Array, axis=None) -> jax.Array:
+    """fake_quant with a straight-through estimator.
+
+    Forward: WRPN mid-tread QDQ at max|w| scale (``axis=None``: per-tensor,
+    the paper's choice; ``axis=0``: per-output-column, what the LM path uses
+    so QAT sees EXACTLY the codes the bitplane serving path will pack).
+    Backward: identity inside the clip region, zero outside (clipped STE) —
+    standard QAT gradient, matching the paper's short-retrain loop.  The
+    scale is treated as a constant in the backward pass.
+    """
+    scale = jax.lax.stop_gradient(tensor_scale(w, axis=axis))
+    return _fq_ste(w, jnp.asarray(bits, jnp.int32), scale)
+
+
+def quantize_to_int(
+    w: jax.Array, bits: int, scale: jax.Array | None = None, axis=None
+):
+    """Quantize to signed integer codes in [-(2^(k-1)-1), +(2^(k-1)-1)].
+
+    Returns ``(codes_int8_or_int32, scale)``.  Static ``bits`` only — this is
+    the serving-time path (pack.py consumes the codes).
+    """
+    if bits >= FP_BITS:
+        raise ValueError("quantize_to_int requires bits < 32")
+    if scale is None:
+        scale = tensor_scale(w, axis=axis)
+    n = float(2 ** (bits - 1) - 1) if bits > 1 else 1.0
+    wc = jnp.clip(jnp.asarray(w, jnp.float32) / scale, -1.0, 1.0)
+    codes = jnp.round(wc * n)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return codes.astype(dtype), scale
+
+
+def dequantize_from_int(codes: jax.Array, bits: int, scale: jax.Array):
+    """Inverse of :func:`quantize_to_int`."""
+    n = float(2 ** (bits - 1) - 1) if bits > 1 else 1.0
+    return codes.astype(jnp.float32) / n * scale
+
+
+def quant_error(w: jax.Array, bits: int) -> jax.Array:
+    """Total squared quantization error ‖w − Q(w)‖² (ADMM baseline uses it)."""
+    return jnp.sum((w - fake_quant(w, bits)) ** 2)

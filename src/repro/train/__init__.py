@@ -1,0 +1,2 @@
+from repro.train.train_step import make_train_step, make_eval_step  # noqa: F401
+from repro.train.serve import quantize_for_serving, make_decode_step  # noqa: F401

@@ -1,0 +1,64 @@
+"""QAT train/eval step factories.
+
+``train_step(state, batch, bits_map)``:
+  1. QDQ every quantizable weight group at its (runtime-data) bitwidth —
+     the paper's WRPN technique with STE, so "short retrain" inside the
+     ReLeQ environment is just N of these steps at the candidate policy.
+  2. forward + backward with the configured remat policy,
+  3. AdamW update (fp32 or int8 moments).
+
+``bits_map`` is a pytree of int32 leaves: feeding the SAME executable
+different policies costs nothing — that's what makes the RL environment's
+inner loop cheap at scale (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, global_norm
+from repro.quant.qat import quantize_params
+
+
+def init_state(model, optimizer: AdamW, rng) -> dict:
+    params = model.init(rng)
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def make_train_step(model, optimizer: AdamW, *, remat: str = "none",
+                    donate: bool = True):
+    groups = model.quant_groups()
+
+    def step(state, batch, bits_map):
+        def loss_fn(params):
+            qp = quantize_params(params, bits_map, groups)
+            return model.loss(qp, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt = optimizer.update(state["params"], grads, state["opt"])
+        out = {"loss": loss, "grad_norm": global_norm(grads), **metrics}
+        return {"params": new_params, "opt": new_opt}, out
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def make_eval_step(model):
+    """Eval NLL of a *quantized* model — the ReLeQ accuracy-proxy input."""
+    groups = model.quant_groups()
+
+    def step(params, batch, bits_map):
+        qp = quantize_params(params, bits_map, groups)
+        _, metrics = model.loss(qp, batch)
+        return metrics["nll"]
+
+    return jax.jit(step)
+
+
+def make_fp_eval_step(model):
+    def step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics["nll"]
+
+    return jax.jit(step)

@@ -1,0 +1,114 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and unit-tested):
+
+- **checkpoint/restart**: full state (params, optimizer, data cursor, RNG,
+  step, and — when driven by ReLeQ — the search state) saved atomically
+  every ``ckpt_interval`` steps; ``Trainer.run`` resumes from the newest
+  complete checkpoint automatically after a crash.
+- **straggler mitigation**: per-step wall-clock watermarks vs a running
+  EMA; a step slower than ``straggler_factor ×`` EMA increments a counter
+  and fires ``on_straggler`` (on a real fleet: re-issue the step / evict
+  the slow host; here: logged + surfaced in metrics so tests can assert).
+- **elastic scaling**: on restore the data pipeline can be re-sharded to a
+  different host count (dist/elastic.py handles array re-placement).
+- **NaN quarantine**: a non-finite loss aborts the step, reloads the last
+  checkpoint and skips the offending batch — cheap insurance at 1000-node
+  scale where a single bad host can poison the run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro import ckpt as ckpt_lib
+
+
+@dataclass
+class Trainer:
+    model: object
+    optimizer: object
+    data: object                      # SyntheticLMData-like
+    step_fn: object                   # jitted (state, batch, bits_map) -> (state, metrics)
+    bits_map: dict
+    ckpt_dir: str | None = None
+    ckpt_interval: int = 50
+    straggler_factor: float = 3.0
+    on_straggler: object = None
+    log_every: int = 10
+    history: list = field(default_factory=list)
+    straggler_count: int = 0
+    _ema: float | None = None
+
+    def save(self, state, step: int):
+        if self.ckpt_dir is None:
+            return
+        ckpt_lib.save(self.ckpt_dir, step, state,
+                      meta={"data": self.data.state_dict(),
+                            "bits_map": {k: np.asarray(v).tolist()
+                                         for k, v in self.bits_map.items()}})
+
+    def try_restore(self, state):
+        """-> (state, start_step); falls back to the given fresh state."""
+        if self.ckpt_dir is None:
+            return state, 0
+        try:
+            tree, meta, step = ckpt_lib.restore(self.ckpt_dir)
+        except FileNotFoundError:
+            return state, 0
+        self.data.load_state_dict(meta["data"])
+        restored = jax.tree.map(lambda ref, a: jax.numpy.asarray(a, ref.dtype), state, tree)
+        return restored, step
+
+    _warmup: int = 0
+
+    def _watch(self, dt: float, step: int):
+        # first 2 steps include compilation — never seed the EMA with them
+        self._warmup += 1
+        if self._warmup <= 2:
+            return
+        if self._ema is None:
+            self._ema = dt
+            return
+        if dt > self.straggler_factor * self._ema:
+            self.straggler_count += 1
+            if self.on_straggler:
+                self.on_straggler(step, dt, self._ema)
+            return  # don't let the straggler poison the EMA
+        self._ema = 0.9 * self._ema + 0.1 * dt
+
+    def run(self, state, num_steps: int, start_step: int | None = None):
+        state, resumed = self.try_restore(state)
+        step = resumed if start_step is None else start_step
+        last_good = step
+        while step < num_steps:
+            batch = self.data.next()
+            t0 = time.perf_counter()
+            new_state, metrics = self.step_fn(state, batch, self.bits_map)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._watch(dt, step)
+            if not np.isfinite(loss):
+                # NaN quarantine: reload last checkpoint, skip this batch
+                if self.ckpt_dir is not None and ckpt_lib.latest_step(self.ckpt_dir) is not None:
+                    tree, meta, ck_step = ckpt_lib.restore(self.ckpt_dir)
+                    state = jax.tree.map(lambda ref, a: jax.numpy.asarray(a, ref.dtype),
+                                         state, tree)
+                    step = ck_step
+                self.data.index += 1  # skip the poisoned batch
+                continue
+            state = new_state
+            step += 1
+            self.history.append({"step": step, "loss": loss, "dt": dt})
+            if self.log_every and step % self.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms, stragglers={self.straggler_count})")
+            if self.ckpt_dir and step % self.ckpt_interval == 0:
+                self.save(state, step)
+                last_good = step
+        if self.ckpt_dir and last_good != step:
+            self.save(state, step)
+        return state

@@ -1,0 +1,76 @@
+"""Paper-faithful CNN substrate + a short end-to-end ReLeQ search."""
+import numpy as np
+import pytest
+
+from repro.cnn import CNNTask
+from repro.core.admm_baseline import admm_select
+from repro.core.pareto import distance_to_frontier, enumerate_space, pareto_frontier
+
+
+@pytest.fixture(scope="module")
+def lenet_task():
+    task = CNNTask("lenet", seed=0)
+    task.pretrain(250)
+    return task
+
+
+def test_pretrain_reaches_accuracy(lenet_task):
+    assert lenet_task.fp_acc > 0.8
+
+
+def test_quantization_sensitivity_monotone(lenet_task):
+    rels = [lenet_task.evaluate_bits({n: b for n in lenet_task.names},
+                                     retrain_steps=2) for b in (8, 4, 2)]
+    assert rels[0] > rels[1] > rels[2]
+    assert rels[0] > 0.9
+
+
+def test_finetune_recovers_accuracy(lenet_task):
+    """Longer retrain must recover more accuracy at 3 bits — the dynamics
+    ReLeQ's short-retrain proxy relies on."""
+    bits = {n: 3 for n in lenet_task.names}
+    short = lenet_task.evaluate_bits(bits, retrain_steps=1)
+    long = lenet_task.long_retrain(bits, steps=60)
+    assert long >= short - 0.02
+
+
+@pytest.mark.slow
+def test_releq_search_end_to_end(lenet_task):
+    """A short ReLeQ run must (a) quantize below 8 bits on average and
+    (b) keep relative accuracy high — Table 2's qualitative claim."""
+    from repro.core.search import ReLeQSearch
+
+    factory = lenet_task.make_env_factory(retrain_steps=2)
+    search = ReLeQSearch(factory, num_envs=1, seed=0)
+    res = search.run(episodes=25)
+    assert res.best_bits
+    avg = np.mean([res.best_bits[n] for n in lenet_task.names])
+    assert avg < 8.0
+    rel = lenet_task.long_retrain(res.best_bits, steps=80)
+    assert rel > 0.9
+
+
+def test_admm_respects_budget(lenet_task):
+    bits = admm_select(lenet_task.groups, lenet_task.weights_by_name(),
+                       budget_avg_bits=4.0)
+    w = {g.name: g.n_weights for g in lenet_task.groups}
+    avg = sum(w[n] * b for n, b in bits.items()) / sum(w.values())
+    assert avg <= 4.0 + 1e-6
+    assert set(bits) == set(lenet_task.names)
+
+
+def test_pareto_enumeration_and_frontier(lenet_task):
+    """Enumerate a coarse LeNet space; ReLeQ-style uniform points must lie
+    near the frontier."""
+    pts = enumerate_space(lenet_task.groups,
+                          lambda b: lenet_task.evaluate_bits(b, retrain_steps=0),
+                          bitset=(2, 4, 8))
+    assert len(pts) == 3 ** 4
+    front = pareto_frontier(pts)
+    assert 1 <= len(front) <= len(pts)
+    accs = [p["acc"] for p in front]
+    quants = [p["quant"] for p in front]
+    assert accs == sorted(accs)      # frontier sorted by construction
+    assert quants == sorted(quants)
+    best = max(pts, key=lambda p: p["acc"] - p["quant"])
+    assert distance_to_frontier(best, front) < 0.2

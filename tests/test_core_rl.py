@@ -1,0 +1,130 @@
+"""ReLeQ core: reward shaping, env mechanics, GAE, PPO convergence."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (
+    energy_reduction_vs_8bit, speedup_vs_8bit, state_of_quantization,
+    stripes_time, tpu_decode_time, tvm_cpu_time,
+)
+from repro.core.env import QuantEnv
+from repro.core.ppo import PPOConfig, gae_advantages
+from repro.core.reward import reward_difference, reward_proposed, reward_ratio
+from repro.core.search import ReLeQSearch
+from repro.models.model import QuantGroup
+
+GROUPS = [QuantGroup(f"L{i}", ("blocks",), i, (64, 64), 64 * 64, 64 * 64 * 50)
+          for i in range(4)]
+
+
+class TestReward:
+    def test_threshold_penalty(self):
+        assert reward_proposed(0.39, 0.5) == -1.0
+        assert reward_proposed(0.41, 0.5) > -1.0
+
+    def test_asymmetry_equal_trade_is_net_negative(self):
+        """The paper's asymmetry: trading ε of relative accuracy for the
+        same ε of quantization benefit never pays — accuracy has priority.
+        (Pointwise gradient dominance is intentionally NOT required: a=0.2
+        makes the quant gradient steepen toward the optimum, §2.6.)"""
+        eps = 0.05
+        for acc in (0.92, 0.97, 1.0):
+            for q in (0.35, 0.5, 0.8):
+                keep = reward_proposed(acc, q)
+                trade = reward_proposed(acc - eps, q - eps)
+                assert trade < keep, (acc, q, trade, keep)
+
+    def test_monotone(self):
+        assert reward_proposed(1.0, 0.3) > reward_proposed(0.9, 0.3)
+        assert reward_proposed(1.0, 0.3) > reward_proposed(1.0, 0.6)
+
+    def test_alternatives(self):
+        assert reward_ratio(0.9, 0.45) == pytest.approx(2.0)
+        assert reward_difference(0.9, 0.4) == pytest.approx(0.5)
+
+
+class TestCostModel:
+    def test_sq_formula_hand_computed(self):
+        g = [QuantGroup("a", ("a",), None, (2, 2), 4, 40),
+             QuantGroup("b", ("b",), None, (2, 2), 4, 40)]
+        # cost_l = n_w*120 + n_mac = 4*120 + 40 = 520 each
+        sq = state_of_quantization([4, 8], g)
+        assert sq == pytest.approx((520 * 4 + 520 * 8) / (520 * 8 * 2))
+
+    def test_sq_bounds(self):
+        assert state_of_quantization([8] * 4, GROUPS) == pytest.approx(1.0)
+        assert 0 < state_of_quantization([2] * 4, GROUPS) < 1
+
+    def test_speedups(self):
+        bits = [4] * 4
+        assert speedup_vs_8bit(stripes_time, bits, GROUPS) == pytest.approx(2.0)
+        assert speedup_vs_8bit(tvm_cpu_time, bits, GROUPS) == pytest.approx(2.0)
+        # decode at batch 1 is HBM-bound: time ∝ bits -> 2×
+        assert speedup_vs_8bit(tpu_decode_time, bits, GROUPS) == pytest.approx(
+            2.0, rel=0.05)
+        assert energy_reduction_vs_8bit(bits, GROUPS) == pytest.approx(2.0)
+
+
+class TestEnv:
+    def test_episode_walk_and_reward(self):
+        env = QuantEnv(groups=GROUPS, evaluate=lambda bits: 0.9,
+                       weight_std={g.name: 0.5 for g in GROUPS})
+        obs = env.reset()
+        assert obs.shape == (6,)
+        total_done = False
+        for t in range(env.T):
+            obs, r, done, info = env.step(0)  # pick 2 bits everywhere
+            total_done = done
+        assert total_done
+        assert info["bits"] == {g.name: 2 for g in GROUPS}
+        assert info["quant"] == pytest.approx(2 / 8)
+
+    def test_frozen_groups_not_stepped(self):
+        env = QuantEnv(groups=GROUPS, evaluate=lambda b: 1.0,
+                       weight_std={g.name: 0.1 for g in GROUPS},
+                       frozen={"L0": 8})
+        assert env.T == 3
+        for t in range(env.T):
+            _, _, done, info = env.step(0)
+        assert info["bits"]["L0"] == 8
+
+
+class TestGAE:
+    def test_matches_bruteforce(self):
+        rng = np.random.default_rng(0)
+        r = rng.normal(size=(2, 5)).astype(np.float32)
+        v = rng.normal(size=(2, 5)).astype(np.float32)
+        gamma, lam = 0.9, 0.8
+        adv, ret = gae_advantages(r, v, gamma, lam)
+        # brute force for batch 0
+        for b in range(2):
+            for t in range(5):
+                acc, coef = 0.0, 1.0
+                for i in range(t, 5):
+                    nv = v[b, i + 1] if i + 1 < 5 else 0.0
+                    delta = r[b, i] + gamma * nv - v[b, i]
+                    acc += coef * delta
+                    coef *= gamma * lam
+                assert adv[b, t] == pytest.approx(acc, rel=1e-4, abs=1e-5)
+        np.testing.assert_allclose(ret, adv + v, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_ppo_learns_layer_sensitivity():
+    """The agent must learn that layer 2 needs high bits, others don't."""
+    sens = [2.0, 2.0, 6.0, 2.5]
+
+    def evaluate(bits):
+        acc = 1.0
+        for i, g in enumerate(GROUPS):
+            acc *= 1.0 / (1.0 + np.exp(-(bits[g.name] - sens[i]) * 2.2))
+        return acc
+
+    def factory(i):
+        return QuantEnv(groups=GROUPS, evaluate=evaluate,
+                        weight_std={g.name: 0.5 for g in GROUPS})
+
+    search = ReLeQSearch(factory, num_envs=1, seed=0)
+    res = search.run(episodes=120)
+    bb = res.best_bits
+    assert bb["L2"] >= 6
+    assert np.mean([bb["L0"], bb["L1"], bb["L3"]]) <= 5.5

@@ -1,0 +1,172 @@
+"""Distribution: sharding specs, small-mesh lower/compile, EP MoE, elastic.
+
+Multi-device cases run in SUBPROCESSES (XLA_FLAGS must be set before jax
+initializes; the main test process keeps 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stderr[-4000:]
+    return r.stdout
+
+
+def test_param_specs_cover_all_archs():
+    from jax.sharding import PartitionSpec
+
+    code = """
+    import jax
+    from repro.configs import all_archs, get_config
+    from repro.models import build_model
+    from repro.launch import specs as S
+    from repro.dist import sharding as shd
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for arch in all_archs():
+        model = build_model(get_config(arch, smoke=True))
+        ps = S.params_struct(model)
+        specs = shd.param_specs(ps, mesh)
+        n_leaves = len(jax.tree.leaves(ps))
+        n_specs = len(jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+        assert n_specs == n_leaves, (arch, n_specs, n_leaves)
+    print("OK")
+    """
+    assert "OK" in run_py(code)
+
+
+@pytest.mark.slow
+def test_small_mesh_train_step_runs():
+    """Lower + compile + EXECUTE a sharded QAT train step on 8 fake devices."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.dist import sharding as shd
+    from repro.quant.qat import bits_assignment, policy_for, quantize_params
+    from repro.data import SyntheticLMData
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("moonshot-v1-16b-a3b", smoke=True)
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    groups = model.quant_groups()
+    bm = {k: jnp.asarray(v) for k, v in bits_assignment(
+        groups, policy_for(model, 8)).items()}
+
+    def step(state, batch, bmm):
+        def loss_fn(p):
+            return model.loss(quantize_params(p, bmm, groups), batch,
+                              remat="full")
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+        p2, o2 = opt.update(state["params"], g, state["opt"])
+        return {"params": p2, "opt": o2}, l
+
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": opt.init(params)}
+        st_specs = shd.to_named(shd.state_specs(state, mesh), mesh)
+        state = jax.device_put(state, st_specs)
+        data = SyntheticLMData(seed=0, global_batch=4, seq_len=16,
+                               vocab=cfg.vocab_size)
+        batch = {k: jnp.asarray(v) for k, v in data.next().items()}
+        jstep = jax.jit(step, in_shardings=(st_specs, None, None))
+        losses = []
+        for _ in range(3):
+            state, l = jstep(state, batch, bm)
+            losses.append(float(l))
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+    print("OK", losses)
+    """
+    assert "OK" in run_py(code)
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_meshless():
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.models.moe import init_moe, moe_ffn
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = jax.random.PRNGKey(1)
+    B, S, D, F, E, k = 4, 8, 16, 24, 8, 2
+    p = init_moe(rng, E, D, F, jnp.float32)
+    x = jax.random.normal(rng, (B, S, D), jnp.float32)
+    y_ref, _ = moe_ffn(x, p, k=k, no_drop=True)
+    with jax.set_mesh(mesh):
+        y_ep, _ = jax.jit(lambda x, p: moe_ffn(x, p, k=k, no_drop=True))(x, p)
+    err = float(jnp.max(jnp.abs(y_ref - y_ep)))
+    assert err < 1e-5, err
+    print("OK", err)
+    """
+    assert "OK" in run_py(code)
+
+
+@pytest.mark.slow
+def test_elastic_reshard_checkpoint():
+    """Save on a 4-device mesh, restore onto 8 devices — loss continues."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np, tempfile, os
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.dist import sharding as shd
+    from repro import ckpt as ckpt_lib
+    from repro.data import SyntheticLMData
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    tmp = tempfile.mkdtemp()
+
+    def fit(mesh_shape, restore, steps):
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            params = model.init(jax.random.PRNGKey(0))
+            state = {"params": params, "opt": opt.init(params)}
+            specs = shd.to_named(shd.state_specs(state, mesh), mesh)
+            if restore:
+                tree, meta, step = ckpt_lib.restore(tmp)
+                state = jax.device_put(
+                    jax.tree.map(lambda r, a: jnp.asarray(a, r.dtype),
+                                 state, tree), specs)
+            else:
+                state = jax.device_put(state, specs)
+            data = SyntheticLMData(seed=0, global_batch=4, seq_len=16,
+                                   vocab=cfg.vocab_size)
+            def step_fn(state, batch):
+                def loss_fn(p):
+                    return model.loss(p, batch)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+                p2, o2 = opt.update(state["params"], g, state["opt"])
+                return {"params": p2, "opt": o2}, l
+            js = jax.jit(step_fn, in_shardings=(specs, None))
+            l = None
+            for _ in range(steps):
+                state, l = js(state, {k: jnp.asarray(v) for k, v in data.next().items()})
+            ckpt_lib.save(tmp, steps, state)
+            return float(l)
+
+    l1 = fit((2, 2), restore=False, steps=3)   # 4 chips
+    l2 = fit((2, 4), restore=True, steps=2)    # elastic: 8 chips
+    assert np.isfinite(l2) and l2 < l1 + 0.5, (l1, l2)
+    print("OK", l1, l2)
+    """
+    assert "OK" in run_py(code)

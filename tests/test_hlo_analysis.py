@@ -1,0 +1,45 @@
+"""Loop-aware HLO analysis: flops through (nested) scans, collectives."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo, roofline_from_costs
+
+W = jnp.zeros((128, 128), jnp.float32)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_plain_matmul():
+    c = _compile(lambda x, w: x @ w, W, W)
+    assert analyze_hlo(c.as_text()).flops == 2 * 128 ** 3
+
+
+def test_scan_multiplies_body():
+    def f(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=10)[0]
+    c = _compile(f, W, W)
+    assert analyze_hlo(c.as_text()).flops == 10 * 2 * 128 ** 3
+
+
+def test_nested_scan():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+        def outer(c, _):
+            return jax.lax.scan(inner, c, None, length=10)[0], None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+    c = _compile(f, W, W)
+    assert analyze_hlo(c.as_text()).flops == 50 * 2 * 128 ** 3
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.launch.hlo_analysis import HLOCosts
+
+    costs = HLOCosts(flops=197e12, traffic_bytes=819e9 / 2)
+    rl = roofline_from_costs(costs, chips=1, model_flops=197e12 / 2)
+    assert rl.bottleneck == "compute"
+    assert rl.t_compute == 1.0
+    assert rl.roofline_fraction == 0.5
+    assert rl.useful_ratio == 0.5

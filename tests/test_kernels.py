@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the brief: sweep shapes/dtypes per kernel and assert_allclose against
+the ref.py oracle.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.qmm import qmm_pallas
+from repro.quant.pack import pack_weight
+from repro.quant.wrpn import tensor_scale
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 256), (64, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [2, 4, 8, 32])
+def test_fake_quant_kernel(shape, dtype, bits):
+    w = jnp.asarray(RNG.normal(size=shape), dtype)
+    scale = tensor_scale(w)
+    got = fake_quant_pallas(w, jnp.int32(bits), scale,
+                            block=(min(128, shape[0]), min(128, shape[1])),
+                            interpret=True)
+    want = kref.fake_quant_ref(w, jnp.int32(bits), scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("mkn", [(8, 64, 128), (32, 128, 128), (128, 256, 128)])
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("path", ["dequant", "bitserial"])
+def test_qmm_kernel(mkn, bits, path):
+    M, K, N = mkn
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    planes, scale = pack_weight(w, bits)
+    want = kref.qmm_ref(x, planes, scale, bits)
+    got = qmm_pallas(x, planes, scale.reshape(1, N), bits=bits, path=path,
+                     block=(min(128, M), min(128, N), min(128, K)),
+                     interpret=True)
+    rel = float(jnp.max(jnp.abs(got - want))) / float(jnp.max(jnp.abs(want)))
+    assert rel < 2e-2, rel  # bf16 MXU accumulation tolerance
+
+
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_qmm_dtypes(xdtype):
+    M, K, N = 16, 64, 128
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(M, K)), xdtype)
+    planes, scale = pack_weight(w, 4)
+    want = kref.qmm_ref(x.astype(jnp.float32), planes, scale, 4)
+    got = qmm_pallas(x, planes, scale.reshape(1, N), bits=4,
+                     block=(16, 128, 64), interpret=True)
+    rel = float(jnp.max(jnp.abs(got - want))) / float(jnp.max(jnp.abs(want)))
+    assert rel < 3e-2
+
+
+def test_ops_wrapper_pads_and_dispatches():
+    from repro.kernels import ops
+
+    os.environ["REPRO_PALLAS"] = "interpret"
+    try:
+        w = jnp.asarray(RNG.normal(size=(64, 96)), jnp.float32)
+        x = jnp.asarray(RNG.normal(size=(3, 5, 64)), jnp.float32)  # odd batch
+        planes, scale = pack_weight(w, 3)
+        got = ops.qmm(x, planes, scale, bits=3)
+        want = kref.qmm_ref(x.reshape(15, 64), planes, scale, 3).reshape(3, 5, 96)
+        rel = float(jnp.max(jnp.abs(got - want))) / float(jnp.max(jnp.abs(want)))
+        assert rel < 2e-2
+    finally:
+        os.environ["REPRO_PALLAS"] = "ref"

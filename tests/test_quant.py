@@ -1,0 +1,129 @@
+"""Quantization substrate: WRPN quantizer, bitplane packing, policy, fp8 state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.int8_opt import dequantize_state, quantize_state, QTensor
+from repro.quant.pack import (
+    dequant_packed, pack_bitplanes, pack_weight, packed_nbytes, unpack_bitplanes,
+)
+from repro.quant.policy import QuantPolicy
+from repro.quant.wrpn import (
+    fake_quant, fake_quant_ste, quantize_to_int, tensor_scale,
+)
+
+RNG = np.random.default_rng(0)
+
+
+class TestWRPN:
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 6, 7, 8])
+    def test_level_count(self, bits):
+        """Mid-tread: at most 2^(k-1)-1 magnitude levels each side + zero."""
+        w = jnp.asarray(RNG.normal(size=(64, 64)), jnp.float32)
+        wq = fake_quant(w, bits)
+        n = max(2 ** (bits - 1) - 1, 1)
+        levels = np.unique(np.round(np.asarray(wq) / float(tensor_scale(w)) * n))
+        assert len(levels) <= 2 * n + 1
+        assert 0.0 in np.round(levels)  # mid-tread: zero representable
+
+    def test_idempotent(self):
+        w = jnp.asarray(RNG.normal(size=(32, 32)), jnp.float32)
+        q1 = fake_quant(w, 4)
+        q2 = fake_quant(q1, 4)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+    def test_error_monotone_in_bits(self):
+        w = jnp.asarray(RNG.normal(size=(128, 64)), jnp.float32)
+        errs = [float(jnp.mean((w - fake_quant(w, b)) ** 2)) for b in (2, 3, 4, 6, 8)]
+        assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+
+    def test_fp_passthrough(self):
+        w = jnp.asarray(RNG.normal(size=(8, 8)), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(fake_quant(w, 32)), np.asarray(w))
+
+    def test_ste_gradient_inside_clip(self):
+        w = jnp.asarray(RNG.normal(size=(64,)), jnp.float32)
+        g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, jnp.int32(3))))(w)
+        # per-tensor scale = max|w|: all |w| <= scale -> gradient all ones
+        np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 2 ** 16))
+    def test_quantized_values_on_grid(self, bits, seed):
+        """Property: every QDQ output is scale·i/n for integer |i| <= n."""
+        w = jnp.asarray(np.random.default_rng(seed).normal(size=(41,)), jnp.float32)
+        s = float(tensor_scale(w))
+        n = 2 ** (bits - 1) - 1
+        wq = np.asarray(fake_quant(w, bits))
+        grid = np.round(wq / s * n)
+        np.testing.assert_allclose(wq, grid / n * s, atol=1e-5)
+        assert np.all(np.abs(grid) <= n)
+
+
+class TestPack:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 7, 8])
+    def test_roundtrip(self, bits):
+        w = jnp.asarray(RNG.normal(size=(64, 24)), jnp.float32)
+        codes, scale = quantize_to_int(w, bits, axis=0)
+        packed = pack_bitplanes(codes, bits)
+        assert packed.shape == (bits, 8, 24)
+        back = unpack_bitplanes(packed, bits)
+        np.testing.assert_array_equal(np.asarray(codes, np.int32), np.asarray(back))
+
+    def test_bytes_scale_linearly_with_bits(self):
+        for b in range(2, 9):
+            assert packed_nbytes(512, 128, b) == b * 64 * 128
+
+    @settings(max_examples=15, deadline=None)
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 999))
+    def test_dequant_matches_fake_quant(self, bits, seed):
+        """pack→dequant == per-column WRPN QDQ (no train/serve gap)."""
+        w = jnp.asarray(np.random.default_rng(seed).normal(size=(16, 10)),
+                        jnp.float32)
+        planes, scale = pack_weight(w, bits)
+        rec = dequant_packed(planes, scale, bits)
+        ref = fake_quant(w, bits, scale=tensor_scale(w, axis=0), axis=0)
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(ref), atol=1e-5)
+
+    def test_k_not_multiple_of_8_raises(self):
+        codes, _ = quantize_to_int(jnp.ones((12, 4)), 4)
+        with pytest.raises(ValueError):
+            pack_bitplanes(codes, 4)
+
+
+class TestPolicy:
+    def test_json_roundtrip_and_frozen(self):
+        pol = QuantPolicy(("a", "b", "c"), {"a": 4, "b": 2}, frozen={"c": 8})
+        pol2 = QuantPolicy.from_json(pol.to_json())
+        assert pol2.get("a") == 4 and pol2.get("c") == 8
+        with pytest.raises(ValueError):
+            pol.with_bits("c", 2)
+        assert pol.searchable == ("a", "b")
+
+    def test_as_array_order(self):
+        pol = QuantPolicy(("x", "y"), {"x": 3, "y": 5})
+        assert pol.as_array().tolist() == [3, 5]
+        assert pol.average_bits() == 4.0
+
+
+class TestFp8State:
+    def test_roundtrip_small_values(self):
+        """Second-moment-like tiny values must not collapse to zero."""
+        v = jnp.asarray(np.abs(RNG.normal(size=(1024,))) ** 2 * 1e-6 + 1e-12,
+                        jnp.float32)
+        from repro.quant.int8_opt import dequantize_state_sq, quantize_state_sq
+
+        d = dequantize_state_sq(quantize_state_sq(v))
+        rel = np.asarray(jnp.abs(d - v) / (v + 1e-30))
+        assert np.median(rel) < 0.15
+
+    def test_sharding_friendly_shape(self):
+        x = jnp.asarray(RNG.normal(size=(4, 8, 512)), jnp.float32)
+        q = quantize_state(x)
+        assert isinstance(q, QTensor)
+        assert q.codes.shape == (4, 8, 2, 256)  # leading dims preserved
+        d = dequantize_state(q)
+        assert d.shape == x.shape
+        assert float(jnp.max(jnp.abs(d - x))) / float(jnp.max(jnp.abs(x))) < 0.1

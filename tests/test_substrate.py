@@ -1,0 +1,174 @@
+"""Substrates: data pipeline, optimizer, checkpointing, trainer restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt as ckpt_lib
+from repro.data import SyntheticLMData
+from repro.optim import AdamW, cosine_schedule
+from repro.quant.int8_opt import QTensor, quantize_state
+
+
+class TestData:
+    def test_deterministic(self):
+        a = SyntheticLMData(seed=3, global_batch=4, seq_len=16, vocab=97)
+        b = SyntheticLMData(seed=3, global_batch=4, seq_len=16, vocab=97)
+        np.testing.assert_array_equal(a.next()["tokens"], b.next()["tokens"])
+
+    def test_cursor_restore(self):
+        a = SyntheticLMData(seed=1, global_batch=4, seq_len=8, vocab=50)
+        a.next(); a.next()
+        state = a.state_dict()
+        want = a.next()
+        b = SyntheticLMData(seed=1, global_batch=4, seq_len=8, vocab=50)
+        b.load_state_dict(state)
+        np.testing.assert_array_equal(b.next()["tokens"], want["tokens"])
+
+    def test_shards_disjoint_streams(self):
+        a = SyntheticLMData(seed=1, global_batch=8, seq_len=8, vocab=50,
+                            shard=0, num_shards=2)
+        b = SyntheticLMData(seed=1, global_batch=8, seq_len=8, vocab=50,
+                            shard=1, num_shards=2)
+        assert a.local_batch == 4
+        assert not np.array_equal(a.next()["tokens"], b.next()["tokens"])
+
+    def test_learnable_structure(self):
+        """Markov chain: every next token is one of 4 successors."""
+        from repro.data.pipeline import _chain
+
+        d = SyntheticLMData(seed=5, global_batch=2, seq_len=64, vocab=31)
+        chain = _chain(5, 31)
+        batch = d.next()
+        toks = np.concatenate([batch["tokens"][:, :1],
+                               batch["labels"]], axis=1)
+        for b in range(2):
+            for t in range(63):
+                assert toks[b, t + 1] in chain[toks[b, t]]
+
+
+class TestAdamW:
+    def test_quadratic_convergence_both_moments(self):
+        w0 = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(300,)),
+                               jnp.float32)}
+        for moments in ("fp32", "int8"):
+            opt = AdamW(lr=0.1, moments=moments, clip_norm=None)
+            st, p = opt.init(w0), w0
+            for _ in range(60):
+                g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+                p, st = opt.update(p, g, st)
+            assert float(jnp.sum(p["w"] ** 2)) < 0.5, moments
+
+    def test_clip_norm(self):
+        opt = AdamW(lr=0.0, clip_norm=1.0)
+        p = {"w": jnp.zeros((4,))}
+        st = opt.init(p)
+        p2, st = opt.update(p, {"w": jnp.full((4,), 100.0)}, st)
+        np.testing.assert_allclose(np.asarray(p2["w"]), 0.0)
+
+    def test_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=110)
+        assert float(lr(5)) == pytest.approx(0.5)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(110)) == pytest.approx(0.1, abs=1e-3)
+
+
+class TestCheckpoint:
+    def test_roundtrip_with_qtensor(self, tmp_path):
+        tree = {"a": jnp.arange(5.0), "q": quantize_state(jnp.ones((512,))),
+                "nested": {"b": jnp.ones((2, 3), jnp.bfloat16)}}
+        ckpt_lib.save(str(tmp_path), 7, tree, meta={"x": 1})
+        back, meta, step = ckpt_lib.restore(str(tmp_path))
+        assert step == 7 and meta["x"] == 1
+        assert isinstance(back["q"], QTensor)
+        np.testing.assert_array_equal(back["a"], np.arange(5.0))
+        assert back["nested"]["b"].dtype == jnp.bfloat16
+
+    def test_prune_and_latest(self, tmp_path):
+        for s in (1, 2, 3, 4, 5):
+            ckpt_lib.save(str(tmp_path), s, {"x": jnp.asarray(s)}, keep=2)
+        assert ckpt_lib.latest_step(str(tmp_path)) == 5
+        _, _, step = ckpt_lib.restore(str(tmp_path), step=4)
+        assert step == 4
+        with pytest.raises(FileNotFoundError):
+            ckpt_lib.restore(str(tmp_path), step=1)  # pruned
+
+    def test_incomplete_tmp_ignored(self, tmp_path):
+        ckpt_lib.save(str(tmp_path), 1, {"x": jnp.asarray(1)})
+        os.makedirs(tmp_path / "step_00000009.tmp")  # crashed write
+        assert ckpt_lib.latest_step(str(tmp_path)) == 1
+
+
+class TestTrainerRestart:
+    def test_resume_identical_loss_curve(self, tmp_path):
+        """Crash after step 6, restart; steps 7-10 must match a straight run."""
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.quant.qat import bits_assignment, policy_for
+        from repro.train.train_step import init_state, make_train_step
+        from repro.train.trainer import Trainer
+
+        cfg = get_config("phi3-mini-3.8b", smoke=True)
+        model = build_model(cfg)
+        opt = AdamW(lr=1e-3)
+        bm = {k: jnp.asarray(v) for k, v in bits_assignment(
+            model.quant_groups(), policy_for(model, 8)).items()}
+        step_fn = make_train_step(model, opt, donate=False)
+
+        def mk_trainer(ckpt_dir):
+            data = SyntheticLMData(seed=0, global_batch=4, seq_len=16,
+                                   vocab=cfg.vocab_size)
+            return Trainer(model=model, optimizer=opt, data=data,
+                           step_fn=step_fn, bits_map=bm, ckpt_dir=ckpt_dir,
+                           ckpt_interval=3, log_every=0)
+
+        # straight 10-step run (no checkpointing)
+        t0 = mk_trainer(None)
+        s0 = init_state(model, opt, jax.random.PRNGKey(0))
+        t0.run(s0, 10)
+        ref = [h["loss"] for h in t0.history]
+
+        # run to 6, "crash", resume to 10
+        t1 = mk_trainer(str(tmp_path))
+        s1 = init_state(model, opt, jax.random.PRNGKey(0))
+        t1.run(s1, 6)
+        t2 = mk_trainer(str(tmp_path))
+        s2 = init_state(model, opt, jax.random.PRNGKey(0))  # fresh; restored inside
+        t2.run(s2, 10)
+        resumed = [h["loss"] for h in t2.history]
+        np.testing.assert_allclose(resumed, ref[6:], rtol=1e-4)
+
+    def test_straggler_detection(self):
+        import time as _t
+
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.quant.qat import bits_assignment, policy_for
+        from repro.train.train_step import init_state, make_train_step
+        from repro.train.trainer import Trainer
+
+        cfg = get_config("phi3-mini-3.8b", smoke=True)
+        model = build_model(cfg)
+        opt = AdamW(lr=1e-3)
+        bm = {k: jnp.asarray(v) for k, v in bits_assignment(
+            model.quant_groups(), policy_for(model, 8)).items()}
+        inner = make_train_step(model, opt, donate=False)
+        calls = {"n": 0}
+
+        def slow_step(state, batch, bmm):
+            calls["n"] += 1
+            if calls["n"] == 8:
+                _t.sleep(1.0)  # injected straggler
+            return inner(state, batch, bmm)
+
+        flagged = []
+        tr = Trainer(model=model, optimizer=opt,
+                     data=SyntheticLMData(seed=0, global_batch=4, seq_len=16,
+                                          vocab=cfg.vocab_size),
+                     step_fn=slow_step, bits_map=bm, ckpt_dir=None,
+                     straggler_factor=3.0, log_every=0,
+                     on_straggler=lambda s, dt, ema: flagged.append(s))
+        tr.run(init_state(model, opt, jax.random.PRNGKey(0)), 10)
+        assert tr.straggler_count >= 1 and flagged
