@@ -1,0 +1,133 @@
+# Static vs continuous batching tokens/s at ReLeQ bitwidth policies.
+"""Serving benchmark: ``python -m benchmarks.serve_bench [--arch glm4-9b]``.
+
+One workload of requests with heterogeneous output lengths, served two
+ways at each ``--bits`` policy:
+
+- **static**: the legacy fixed-batch loop — each batch decodes until its
+  *longest* member finishes, early finishers idle their slot,
+- **continuous**: :class:`repro.serve.ServeEngine` — finished slots are
+  refilled from the queue on the very next step.
+
+Prints ``name,tokens_per_s,derived`` CSV rows (useful tokens only — a
+finished sequence's padding steps never count for either mode).  Both
+modes share one jit cache per policy; a warmup pass runs before timing.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.qat import policy_for
+from repro.serve import ServeEngine
+from repro.train.serve import make_decode_step, make_prefill, quantize_for_serving
+
+
+def make_workload(n: int, prompt_len: int, gen: int, vocab: int, seed: int = 0):
+    """(prompts (n, prompt_len), gens (n,)) — gen lengths spread over
+    [gen//4, gen] so static batches always carry stragglers."""
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, vocab, (n, prompt_len), dtype=np.int64)
+    lo = max(1, gen // 4)
+    gens = np.linspace(lo, gen, n).round().astype(int)
+    return prompts, rng.permutation(gens)
+
+
+def run_static(model, sparams, prompts, gens, batch, max_len,
+               prefill_fn, decode_fn) -> tuple[float, int]:
+    """Fixed-batch loop -> (seconds, useful tokens)."""
+    n = len(prompts)
+    total = 0
+    t0 = time.perf_counter()
+    for lo in range(0, n, batch):
+        p = jnp.asarray(prompts[lo:lo + batch])
+        g = gens[lo:lo + batch]
+        logits, cache = prefill_fn(sparams, p, max_len)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        emitted = np.ones(len(g), np.int64)  # prefill token
+        for _ in range(int(g.max())):
+            logits, cache = decode_fn(sparams, cache, tok)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            emitted += emitted < g + 1  # only unfinished sequences count
+        total += int(emitted.sum())
+    return time.perf_counter() - t0, total
+
+
+def run_continuous(model, sparams, prompts, gens, num_slots, max_len,
+                   prefill_fn, decode_fn) -> dict:
+    engine = ServeEngine(model, sparams, num_slots=num_slots,
+                         max_len=max_len, decode_fn=decode_fn,
+                         prefill_fn=prefill_fn)
+    for p, g in zip(prompts, gens):
+        engine.submit(p, int(g) + 1)
+    return engine.run_until_drained()
+
+
+def bench(args) -> list[tuple[str, float, str]]:
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts, gens = make_workload(args.requests, args.prompt_len, args.gen,
+                                  cfg.vocab_size)
+    max_len = args.prompt_len + args.gen + 1
+    rows = []
+    for bits in args.bits:
+        sparams = quantize_for_serving(model, params,
+                                       policy_for(model, default_bits=bits))
+        prefill_fn = make_prefill(model)
+        # static batch == num_slots -> identical decode executable
+        decode_fn = make_decode_step(model, donate=False)
+        # warm both paths: every static batch size that will occur (the
+        # tail batch compiles its own executables) and the batch-1
+        # admission prefill (continuous), so compiles land outside timing
+        warm_sizes = {args.batch}
+        if args.requests % args.batch:
+            warm_sizes.add(args.requests % args.batch)
+        for b in warm_sizes:
+            run_static(model, sparams, prompts[:b], np.minimum(gens[:b], 2),
+                       b, max_len, prefill_fn, decode_fn)
+        run_continuous(model, sparams, prompts[:2], np.minimum(gens[:2], 2),
+                       args.batch, max_len, prefill_fn, decode_fn)
+
+        dt, total = run_static(model, sparams, prompts, gens, args.batch,
+                               max_len, prefill_fn, decode_fn)
+        tps_static = total / dt
+        rows.append((f"serve_static@{bits}b", tps_static,
+                     f"tokens={total};batch={args.batch}"))
+
+        m = run_continuous(model, sparams, prompts, gens, args.batch,
+                           max_len, prefill_fn, decode_fn)
+        tps_cont = m["tokens_per_s"]
+        rows.append((f"serve_continuous@{bits}b", tps_cont,
+                     f"tokens={m['tokens_total']};"
+                     f"occupancy={m['mean_occupancy']:.2f};"
+                     f"vs_static={tps_cont / max(tps_static, 1e-9):.2f}x"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--bits", type=int, nargs="+", default=[2, 4, 8])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size == continuous slot count")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    print("name,tokens_per_s,derived")
+    for name, tps, derived in bench(args):
+        print(f"{name},{tps:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

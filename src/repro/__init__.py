@@ -1,0 +1,2 @@
+"""ReLeQ reproduction package.  Importing installs jax compat shims."""
+from repro import compat as _compat  # noqa: F401

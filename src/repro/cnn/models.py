@@ -9,6 +9,7 @@ conv/fc geometry — the inputs to the State-of-Quantization metric.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass
 
 import jax
@@ -64,7 +65,9 @@ class CNNModel:
         hw = self.input_hw
         flat_in = None
         for s in self.specs:
-            key = jax.random.fold_in(rng, hash(s.name) % (2 ** 31))
+            # crc32, NOT hash(): str hashing is randomized per process,
+            # which made init — and accuracy thresholds — nondeterministic
+            key = jax.random.fold_in(rng, zlib.crc32(s.name.encode()) % (2 ** 31))
             if s.kind == "conv":
                 w = jax.random.normal(key, (s.k, s.k, s.c_in, s.c_out), jnp.float32)
                 w *= (2.0 / (s.k * s.k * s.c_in)) ** 0.5

@@ -1,0 +1,80 @@
+"""Compatibility shims for the container's pinned jax (0.4.x).
+
+The codebase is written against the jax 0.6-era mesh API
+(``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh``).  On 0.4.x the
+ambient mesh lives in ``thread_resources.env.physical_mesh`` and mesh
+contexts are entered with ``with mesh:``.  ``ambient_mesh()`` papers over
+the read side; importing this module installs a ``jax.set_mesh`` fallback
+for the write side.  Every shim defers to the real API when present, so
+the same source runs unchanged on newer jax.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+
+def ambient_mesh():
+    """The mesh enclosing the current trace/context, or None.
+
+    Callers treat ``None`` and an empty mesh identically (no sharding).
+    An empty abstract mesh falls through to the legacy thread-resources
+    mesh: on versions that have ``get_abstract_mesh`` but not
+    ``set_mesh``, our ``set_mesh`` shim enters the legacy context, and
+    preferring the (empty) abstract mesh would silently disable sharding.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        m = get()
+        if m is not None and not m.empty:
+            return m
+    try:
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - future jax drops the legacy path
+        return None
+    return None if pm.empty else pm
+
+
+if not hasattr(jax, "set_mesh"):
+
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = _set_mesh
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True,
+                          **kw):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)
+
+    jax.shard_map = _shard_map_compat
+
+
+if not hasattr(jax.sharding, "AxisType"):
+    import enum
+
+    class _AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisType
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh = jax.make_mesh
+
+    def _make_mesh_compat(axis_shapes, axis_names, *a, axis_types=None, **kw):
+        return _make_mesh(axis_shapes, axis_names, *a, **kw)
+
+    jax.make_mesh = _make_mesh_compat

@@ -40,13 +40,15 @@ class SearchResult:
 
 class ReLeQSearch:
     def __init__(self, make_env, *, num_envs: int = 1, seed: int = 0,
-                 ppo_config: PPOConfig = PPOConfig()):
+                 ppo_config: PPOConfig | None = None):
         self.envs = [make_env(i) for i in range(num_envs)]
         self.num_envs = num_envs
         num_actions = len(self.envs[0].bitset)
         key = jax.random.PRNGKey(seed)
         params = init_agent(key, STATE_DIM, num_actions)
-        self.ppo = PPO(params, ppo_config)
+        # fresh config per instance: a dataclass default here would be ONE
+        # shared object across every ReLeQSearch construction
+        self.ppo = PPO(params, ppo_config if ppo_config is not None else PPOConfig())
         self.rng = jax.random.PRNGKey(seed + 1)
 
     def _collect(self):
@@ -145,7 +147,16 @@ def make_lm_env_factory(model, params, data, *, finetune_steps: int = 4,
             leaf = leaf[g.layer]
         wstd[g.name] = float(jnp.std(leaf.astype(jnp.float32)))
 
+    memo: dict[tuple, float] = {}
+
     def evaluate(bits_by_name: dict) -> float:
+        # bit-vectors recur across episodes (the agent revisits policies,
+        # and early-episode prefixes repeat); the short retrain is the
+        # search's wall-clock bottleneck, so memoize on the full vector
+        key = tuple(bits_by_name[g.name] for g in groups)
+        hit = memo.get(key)
+        if hit is not None:
+            return hit
         pol = QuantPolicy.from_array(tuple(g.name for g in groups),
                                      [bits_by_name[g.name] for g in groups])
         bm = {k: jnp.asarray(v) for k, v in bits_assignment(groups, pol).items()}
@@ -157,7 +168,8 @@ def make_lm_env_factory(model, params, data, *, finetune_steps: int = 4,
         else:
             p_eval = params
         nll_q = float(np.mean([float(eval_step(p_eval, b, bm)) for b in eval_batch]))
-        return float(np.exp(nll_fp - nll_q))
+        memo[key] = float(np.exp(nll_fp - nll_q))
+        return memo[key]
 
     def factory(env_id: int) -> QuantEnv:
         return QuantEnv(groups=groups, evaluate=evaluate, weight_std=wstd,

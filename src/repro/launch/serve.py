@@ -1,8 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --bits 4``.
 
-Loads (or initializes) params, packs them at a ReLeQ policy, and serves
-batched greedy decode requests — the production serve loop the decode
-dry-run cells lower.
+Thin CLI over :class:`repro.serve.ServeEngine`.  Loads (or initializes)
+params, packs them at a ReLeQ policy, and serves a synthetic workload:
+
+- ``--mode continuous`` (default): staggered-arrival requests with
+  heterogeneous output lengths, admitted mid-decode — reports tokens/s,
+  per-request TTFT and slot occupancy.
+- ``--mode static``: the legacy one-shot fixed-batch greedy loop (kept
+  as the parity/latency baseline).
 """
 from __future__ import annotations
 
@@ -11,27 +16,17 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
 from repro.quant.policy import QuantPolicy
 from repro.quant.qat import policy_for
+from repro.serve import SamplingParams, ServeEngine
 from repro.train.serve import make_decode_step, quantize_for_serving
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
-    ap.add_argument("--bits", type=int, default=4)
-    ap.add_argument("--policy-json", default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--ckpt-dir", default=None)
-    args = ap.parse_args()
-
+def _build(args):
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     if args.ckpt_dir:
@@ -43,12 +38,13 @@ def main():
     else:
         params = model.init(jax.random.PRNGKey(0))
     if args.policy_json:
-        with open(args.policy_json) as f:
-            policy = QuantPolicy.from_json(f.read())
+        policy = QuantPolicy.from_file(args.policy_json)
     else:
         policy = policy_for(model, default_bits=args.bits)
-    sparams = quantize_for_serving(model, params, policy)
+    return cfg, model, quantize_for_serving(model, params, policy), policy
 
+
+def _static(args, cfg, model, sparams, policy):
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -67,6 +63,67 @@ def main():
           f"{dt / args.gen * 1e3:.1f} ms/token-step "
           f"(avg policy {policy.average_bits():.1f} bits)")
     print("first sequence:", jnp.concatenate(toks, 1)[0].tolist())
+
+
+def _continuous(args, cfg, model, sparams, policy):
+    max_len = args.prompt_len + args.gen + 1
+    engine = ServeEngine(model, sparams, num_slots=args.num_slots,
+                         max_len=max_len)
+    rng = np.random.default_rng(1)
+    gens = [int(g) for g in
+            rng.integers(max(1, args.gen // 2), args.gen + 1, args.requests)]
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.requests, args.prompt_len))
+    sampling = SamplingParams(temperature=args.temperature)
+    submitted = 0
+    while submitted < args.requests or engine.scheduler.has_work():
+        # staggered arrivals: a fresh request every --arrival-every steps
+        while (submitted < args.requests
+               and engine.steps >= submitted * args.arrival_every):
+            engine.submit(prompts[submitted], gens[submitted] + 1,
+                          sampling=sampling)
+            submitted += 1
+        engine.step()
+    m = engine.metrics()
+    print(f"served {args.requests} requests on {args.num_slots} slots "
+          f"(avg policy {policy.average_bits():.1f} bits)")
+    print(f"tokens/s={m['tokens_per_s']:.1f} occupancy={m['mean_occupancy']:.2f} "
+          f"decode_steps={m['decode_steps']} tokens={m['tokens_total']}")
+    for r in m["requests"]:
+        print(f"  req {r['id']}: {r['new_tokens']} tokens, "
+              f"ttft={r['ttft_steps']} steps / {r['ttft_s'] * 1e3:.0f} ms, "
+              f"latency={r['latency_s'] * 1e3:.0f} ms")
+    print("first sequence:", engine.output(0))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--policy-json", default=None)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static mode: fixed batch size")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="continuous mode: KV-cache pool slots")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="continuous mode: synthetic workload size")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="continuous mode: steps between request arrivals")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg, model, sparams, policy = _build(args)
+    if args.mode == "static":
+        _static(args, cfg, model, sparams, policy)
+    else:
+        _continuous(args, cfg, model, sparams, policy)
 
 
 if __name__ == "__main__":

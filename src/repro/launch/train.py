@@ -46,8 +46,7 @@ def main():
                 weight_decay=0.1, moments="int8" if args.opt8 else "fp32")
     groups = model.quant_groups(seq_len=args.seq_len)
     if args.policy_json:
-        with open(args.policy_json) as f:
-            policy = QuantPolicy.from_json(f.read())
+        policy = QuantPolicy.from_file(args.policy_json)
     else:
         policy = policy_for(model, default_bits=args.bits)
     bits_map = {k: jnp.asarray(v)

@@ -14,13 +14,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import ambient_mesh
+
 # ---------------------------------------------------------------------------
 # sharding helpers
 # ---------------------------------------------------------------------------
 
 
 def _mesh_axes() -> tuple[str, ...]:
-    m = jax.sharding.get_abstract_mesh()
+    m = ambient_mesh()
     return tuple(m.axis_names) if m is not None and not m.empty else ()
 
 
@@ -75,7 +77,7 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
     1-device smoke mesh, the single-pod and the multi-pod mesh, and on archs
     whose head counts don't divide the model axis (e.g. glm4 kv=2).
     """
-    m = jax.sharding.get_abstract_mesh()
+    m = ambient_mesh()
     if m is None or m.empty:
         return x
     sizes = dict(zip(m.axis_names, m.axis_sizes))

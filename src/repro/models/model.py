@@ -22,6 +22,17 @@ class QuantGroup:
     n_macs: int
 
 
+def cache_batch_axis(key: str) -> int:
+    """Axis of the batch/slot dimension in a decode-cache leaf.
+
+    Every model family lays per-layer state out as ``(L, B, ...)`` and
+    per-sequence bookkeeping (``"length"``) as ``(B,)``.  The serving slot
+    pool (repro.serve.cache) uses this to splice a batch-1 prefill cache
+    into one slot of the pooled cache without knowing the family.
+    """
+    return 0 if key == "length" else 1
+
+
 def build_model(cfg):
     """Config -> model object (family dispatch)."""
     from repro.models.transformer import TransformerLM

@@ -42,6 +42,14 @@ from repro.models.common import (
 from repro.models.model import QuantGroup
 
 
+def _embed_table(params):
+    """Embedding matrix, dequantized at lookup when serving-tagged."""
+    emb = params["embed"]
+    if isinstance(emb, QDQ):
+        emb = wrpn_fake_quant(emb.w, emb.bits, axis=0)
+    return emb
+
+
 def wkv6_chunked(r, k, v, logw, u, state0, chunk: int = 16):
     """r/k/v/logw: (B, S, H, K); u: (H, K); state0: (B, H, K, V).
 
@@ -218,9 +226,7 @@ class RWKV6LM:
     def forward(self, params, tokens=None, embeds=None, positions=None,
                 remat: str = "none", return_hidden: bool = False):
         cfg = self.cfg
-        emb = params["embed"]
-        if isinstance(emb, QDQ):
-            emb = wrpn_fake_quant(emb.w, emb.bits, axis=0)
+        emb = _embed_table(params)
         h = embeds.astype(jnp.dtype(cfg.dtype)) if embeds is not None else jnp.take(emb, tokens, axis=0)
         h = constrain(h, batch_axes(), None, None)
 
@@ -275,10 +281,7 @@ class RWKV6LM:
     def decode_step(self, params, cache, tokens, positions=None):
         cfg = self.cfg
         cache = dict(cache)
-        emb = params["embed"]
-        if isinstance(emb, QDQ):
-            emb = wrpn_fake_quant(emb.w, emb.bits, axis=0)
-        h = jnp.take(emb, tokens, axis=0)  # (B,1,D)
+        h = jnp.take(_embed_table(params), tokens, axis=0)  # (B,1,D)
         for l in range(cfg.num_layers):
             p = self._layer_slice(params, l)
             h, (st, xtm, xcm) = self._layer(
@@ -296,7 +299,7 @@ class RWKV6LM:
         """Scan-based prefill collecting per-layer states (max_len unused:
         the wkv state is O(1) in sequence length)."""
         cfg = self.cfg
-        emb = params["embed"]
+        emb = _embed_table(params)
         h = embeds.astype(jnp.dtype(cfg.dtype)) if embeds is not None else jnp.take(emb, tokens, axis=0)
         B, S, _ = h.shape
 
@@ -304,7 +307,17 @@ class RWKV6LM:
             h, (st, xtm, xcm) = self._layer(h, p)
             return h, (st, xtm, xcm)
 
-        h, (sts, xtms, xcms) = jax.lax.scan(block, h, params["blocks"])
+        blocks = params["blocks"]
+        if isinstance(blocks, list):
+            # serving layout: per-layer list (packed buffers differ in plane
+            # count across layers, so a scan cannot stack them) — unroll
+            states = []
+            for p in blocks:
+                h, st = self._layer(h, p)
+                states.append(st)
+            sts, xtms, xcms = (jnp.stack(x) for x in zip(*states))
+        else:
+            h, (sts, xtms, xcms) = jax.lax.scan(block, h, blocks)
         hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
         logits = apply_linear(hn[:, -1:], params["lm_head"]).astype(jnp.float32)
         cache = {

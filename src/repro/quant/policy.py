@@ -109,6 +109,12 @@ class QuantPolicy:
         )
 
     @classmethod
+    def from_file(cls, path) -> "QuantPolicy":
+        """Load a policy JSON written by ``to_json`` (search artifacts)."""
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    @classmethod
     def full_precision(cls, group_names, frozen=None) -> "QuantPolicy":
         return cls(
             tuple(group_names),

@@ -1,0 +1,68 @@
+"""repro.serve — continuous-batching serving for ReLeQ-quantized models.
+
+Why
+---
+The paper's payoff is inference: a learned mixed-precision policy buys
+~2.2x over 8-bit execution, but only if the deployment path keeps the
+hardware busy.  A static batch loop (the old ``launch/serve.py``) admits
+a fixed batch, decodes until the *longest* sequence finishes, and leaves
+every early-finishing slot idle — at heterogeneous output lengths most of
+the speedup the packed kernels buy is burned on padding.  This package is
+an iteration-level (Orca-style) engine: requests are admitted the moment
+a slot frees up, mid-decode, and every step packs all running sequences
+into one jit'd decode over the bit-packed weights.
+
+Architecture (one file per concern)
+-----------------------------------
+- ``request.py``   Request / SamplingParams / token selection.  A request
+  is a prompt + ``max_new_tokens`` budget + sampling params; greedy
+  (temperature 0) is the parity-critical default.
+- ``queue.py``     FIFO admission queue with optional backpressure.
+- ``cache.py``     ``SlotCachePool`` — ONE preallocated decode cache of
+  ``num_slots`` sequences.  Admission splices a batch-1 prefill cache
+  into a free slot (``models.model.cache_batch_axis`` gives the slot axis
+  per leaf, so the same pool code serves transformer KV, Mamba state and
+  RWKV wkv caches); finished sequences free their slot immediately.
+- ``scheduler.py`` ``ContinuousScheduler`` — host-side admit/advance/
+  finish bookkeeping; the device-side decode stays one fixed-shape
+  executable regardless of traffic.
+- ``engine.py``    ``ServeEngine`` — ``submit()`` / ``step()`` /
+  ``run_until_drained()`` + per-request (TTFT, latency) and aggregate
+  (tokens/s, slot occupancy) metrics.  ``ServeEngine.from_params`` packs
+  training params at a ReLeQ ``QuantPolicy`` once, at construction.
+
+Use
+---
+    from repro.serve import ServeEngine, SamplingParams
+    engine = ServeEngine.from_params(model, params, policy, num_slots=8,
+                                     max_len=256)
+    rid = engine.submit(prompt_ids, max_new_tokens=64)
+    engine.run_until_drained()
+    tokens, stats = engine.output(rid), engine.metrics()
+
+CLI: ``python -m repro.launch.serve --mode continuous`` (``--mode
+static`` keeps the legacy one-shot loop).  Benchmark: ``python -m
+benchmarks.serve_bench`` compares the two at several bitwidth policies.
+
+Guarantees
+----------
+- A single request's tokens are bit-identical to the legacy static loop
+  at the same ``QuantPolicy`` (decode is row-independent; pinned by
+  ``tests/test_serve_engine.py``).
+- Slot alloc/free is exact: no double-alloc, no double-free, finished
+  slots reusable the next step.
+
+Known limits (ROADMAP "Open items"): greedy/temperature sampling only,
+prefill recompiles per distinct prompt length (no bucketing yet), single
+host (no sharded slot pool).
+"""
+from repro.serve.cache import SlotCachePool
+from repro.serve.engine import ServeEngine
+from repro.serve.queue import AdmissionQueue
+from repro.serve.request import Request, RequestState, SamplingParams
+from repro.serve.scheduler import ContinuousScheduler
+
+__all__ = [
+    "AdmissionQueue", "ContinuousScheduler", "Request", "RequestState",
+    "SamplingParams", "ServeEngine", "SlotCachePool",
+]

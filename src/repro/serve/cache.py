@@ -1,0 +1,93 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+One preallocated decode cache of ``num_slots`` sequences (the model's own
+``init_cache`` layout: per-layer state ``(L, B, ...)``, bookkeeping
+``(B,)`` — see ``models.model.cache_batch_axis``).  Sequences of different
+lengths share it: admission *splices* a batch-1 prefill cache into a free
+slot, and a finished sequence frees its slot immediately so the next
+queued request can take it on the very next engine step.
+
+The pool is the alloc/free bookkeeping plus the cache pytree; it never
+calls the model.  Invariants (enforced, tested in test_serve_engine.py):
+
+- ``alloc`` returns each slot at most once until it is freed; raises
+  ``RuntimeError`` when the pool is exhausted,
+- ``free`` of a non-allocated slot raises ``ValueError``,
+- ``write`` only accepts a cache whose non-batch dims match the pool's
+  (same layers / cache length / head layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import cache_batch_axis
+
+
+def _splice(pool_cache: dict, single_cache: dict, slot) -> dict:
+    return {
+        key: jax.lax.dynamic_update_slice_in_dim(
+            leaf, single_cache[key].astype(leaf.dtype), slot,
+            axis=cache_batch_axis(key))
+        for key, leaf in pool_cache.items()
+    }
+
+
+# module-level jit: the donated pool cache updates in place, `slot` enters
+# as data, and the executable cache is shared across every pool instance
+# (a per-instance jit would recompile on each fresh engine)
+_splice_jit = jax.jit(_splice, donate_argnums=(0,))
+
+
+class SlotCachePool:
+    def __init__(self, model, num_slots: int, max_len: int, dtype=None):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(num_slots, max_len, dtype)
+        self._free = list(range(num_slots - 1, -1, -1))  # pop() -> lowest id
+        self._active: set[int] = set()
+
+    # ----------------------------------------------------------- bookkeeping
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> frozenset:
+        return frozenset(self._active)
+
+    def occupancy(self) -> float:
+        return len(self._active) / self.num_slots
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(f"all {self.num_slots} slots in use")
+        slot = self._free.pop()
+        self._active.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._active.remove(slot)
+        self._free.append(slot)
+        self._free.sort(reverse=True)  # keep pop() -> lowest id deterministic
+
+    # ------------------------------------------------------------- cache ops
+    def write(self, slot: int, single_cache: dict) -> None:
+        """Splice a batch-1 cache (one prefilled sequence) into ``slot``."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not allocated")
+        if set(single_cache) != set(self.cache):
+            raise ValueError(
+                f"cache keys {sorted(single_cache)} != pool {sorted(self.cache)}")
+        for key, pool_leaf in self.cache.items():
+            ax = cache_batch_axis(key)
+            want = pool_leaf.shape[:ax] + (1,) + pool_leaf.shape[ax + 1:]
+            if tuple(single_cache[key].shape) != want:
+                raise ValueError(
+                    f"cache[{key!r}] shape {tuple(single_cache[key].shape)} "
+                    f"!= {want}")
+        self.cache = _splice_jit(self.cache, single_cache, slot)

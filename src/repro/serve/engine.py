@@ -1,0 +1,191 @@
+"""ServeEngine: the top-level continuous-batching serve loop.
+
+``submit()`` enqueues a request; ``step()`` runs one engine iteration
+(admit -> prefill new sequences into slots -> one packed decode step over
+every running slot); ``run_until_drained()`` steps until queue and slots
+are empty.  Weights stay bit-packed (``quant.pack``) at a ReLeQ
+``QuantPolicy`` for the whole lifetime of the engine — quantization cost
+is paid once at construction, not per request.
+
+Numerics: the decode step is row-independent (per-sequence attention/SSM
+state, drop-free MoE routing in decode), so a request's tokens are
+bit-identical whether it shares the batch with 0 or ``num_slots - 1``
+other sequences — the property the single-request-parity test pins down.
+
+Metrics: per-request TTFT (seconds *and* engine steps), wall latency and
+token counts, plus aggregate tokens/s and mean slot occupancy over decode
+steps (the utilization number static batching wastes).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.policy import QuantPolicy
+from repro.serve.cache import SlotCachePool
+from repro.serve.queue import AdmissionQueue
+from repro.serve.request import Request, SamplingParams
+from repro.serve.scheduler import ContinuousScheduler
+from repro.train.serve import make_decode_step, make_prefill
+
+
+class ServeEngine:
+    def __init__(self, model, sparams, *, num_slots: int = 8,
+                 max_len: int = 256, max_pending: int = 0,
+                 decode_fn=None, prefill_fn=None):
+        self.model = model
+        self.sparams = sparams
+        self.pool = SlotCachePool(model, num_slots, max_len)
+        self.queue = AdmissionQueue(max_pending)
+        self.scheduler = ContinuousScheduler(self.pool, self.queue)
+        # decode_fn/prefill_fn let callers share one jit cache across
+        # engines (the benchmark warms up on a throwaway engine).  The
+        # default decode donates the pool cache — step() immediately
+        # replaces it, so XLA updates the KV buffers in place
+        self._decode = decode_fn or make_decode_step(model, donate=True)
+        self._prefill = prefill_fn or make_prefill(model)
+        # attention caches without a sliding window hold exactly max_len
+        # tokens; SSM/windowed state is O(1)/O(window) so any length fits
+        self._length_bound = (
+            max_len if "k" in self.pool.cache
+            and model.cfg.sliding_window is None else None)
+        self._next_id = 0
+        self._step_idx = 0
+        self._tokens_total = 0
+        self._decode_steps = 0
+        self._occupancy_sum = 0.0
+        self._run_seconds = 0.0
+        self.requests: dict[int, Request] = {}
+
+    @classmethod
+    def from_params(cls, model, params, policy: QuantPolicy, **kw):
+        """Quantize + bit-pack training params at ``policy`` and serve."""
+        from repro.train.serve import quantize_for_serving
+
+        return cls(model, quantize_for_serving(model, params, policy), **kw)
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: SamplingParams | None = None,
+               eos_id: int | None = None) -> int:
+        req = Request(self._next_id, np.asarray(prompt), max_new_tokens,
+                      sampling or SamplingParams(), eos_id)
+        if self._length_bound is not None and req.total_len() > self._length_bound:
+            raise ValueError(
+                f"request needs {req.total_len()} cache tokens > pool "
+                f"max_len {self._length_bound}")
+        req.arrival_step = self._step_idx
+        self.queue.push(req)  # may raise (backpressure): nothing registered
+        self._next_id += 1
+        self.requests[req.request_id] = req
+        return req.request_id
+
+    @property
+    def steps(self) -> int:
+        return self._step_idx
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
+
+    @property
+    def num_running(self) -> int:
+        return self.scheduler.num_running
+
+    # ----------------------------------------------------------------- loop
+    def step(self) -> dict:
+        """One engine iteration.  Returns the step's events:
+        ``{"admitted": [ids], "tokens": [(id, tok)], "finished": [ids]}``.
+        """
+        t0 = time.perf_counter()
+        events = {"admitted": [], "tokens": [], "finished": []}
+
+        # 1) admit queued requests into free slots (mid-decode is fine:
+        #    running slots are untouched, their cache rows never move)
+        for req, slot in self.scheduler.admissions():
+            logits, cache1 = self._prefill(
+                self.sparams, jnp.asarray(req.prompt)[None, :],
+                self.pool.max_len)
+            self.pool.write(slot, cache1)
+            tok = req.select_token(np.asarray(logits)[0, -1])
+            self._emit(req, tok, events)
+            events["admitted"].append(req.request_id)
+            self.scheduler.start(req, slot, tok)
+            if req.done:  # 1-token budget (or instant EOS): slot back now
+                self._finish(self.scheduler.finish(slot), events)
+
+        # 2) one packed decode step over every running slot
+        if self.scheduler.running:
+            self._occupancy_sum += self.pool.occupancy()
+            self._decode_steps += 1
+            toks = np.zeros((self.pool.num_slots, 1), np.int32)
+            for slot, seq in self.scheduler.running.items():
+                toks[slot, 0] = seq.last_token
+            logits, self.pool.cache = self._decode(
+                self.sparams, self.pool.cache, jnp.asarray(toks))
+            rows = np.asarray(logits[:, -1])  # (num_slots, V)
+            for slot, seq in list(self.scheduler.running.items()):
+                tok = seq.request.select_token(rows[slot])
+                self._emit(seq.request, tok, events)
+                if seq.request.done:
+                    self._finish(self.scheduler.finish(slot), events)
+                else:
+                    self.scheduler.advance(slot, tok)
+
+        self._step_idx += 1
+        self._run_seconds += time.perf_counter() - t0
+        return events
+
+    def run_until_drained(self, max_steps: int = 100_000) -> dict:
+        steps = 0
+        while self.scheduler.has_work():
+            if steps >= max_steps:
+                raise RuntimeError(f"not drained after {max_steps} steps")
+            self.step()
+            steps += 1
+        return self.metrics()
+
+    # -------------------------------------------------------------- metrics
+    def _emit(self, req: Request, tok: int, events: dict) -> None:
+        if not req.output_tokens:
+            req.first_token_time = time.perf_counter()
+            req.first_token_step = self._step_idx
+        req.output_tokens.append(tok)
+        self._tokens_total += 1
+        events["tokens"].append((req.request_id, tok))
+
+    def _finish(self, req: Request, events: dict) -> None:
+        req.finish_time = time.perf_counter()
+        events["finished"].append(req.request_id)
+
+    def metrics(self) -> dict:
+        per_request = []
+        for req in self.requests.values():
+            per_request.append({
+                "id": req.request_id,
+                "state": req.state.value,
+                "prompt_len": int(req.prompt.size),
+                "new_tokens": len(req.output_tokens),
+                "ttft_s": req.ttft(),
+                "ttft_steps": (None if req.first_token_step is None
+                               else req.first_token_step - req.arrival_step),
+                "latency_s": (None if req.finish_time is None
+                              else req.finish_time - req.arrival_time),
+            })
+        occ = (self._occupancy_sum / self._decode_steps
+               if self._decode_steps else 0.0)
+        return {
+            "steps": self._step_idx,
+            "decode_steps": self._decode_steps,
+            "tokens_total": self._tokens_total,
+            "tokens_per_s": (self._tokens_total / self._run_seconds
+                             if self._run_seconds > 0 else 0.0),
+            "mean_occupancy": occ,
+            "num_slots": self.pool.num_slots,
+            "requests": per_request,
+        }
+
+    def output(self, request_id: int) -> list[int]:
+        return list(self.requests[request_id].output_tokens)

@@ -1,0 +1,94 @@
+"""Request objects for the continuous-batching engine.
+
+A ``Request`` is one generation job: a prompt, a token budget, and
+sampling parameters.  ``max_new_tokens`` counts every emitted token
+*including* the one produced from the prefill logits — so a request with
+``max_new_tokens = G + 1`` reproduces the legacy static loop's
+``--gen G`` output exactly (prefill argmax + G decode steps).
+
+Token selection lives here too (``select_token``): greedy when
+``temperature == 0`` (the parity-critical default), otherwise
+temperature/top-k sampling from a per-request deterministic generator.
+"""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"        # submitted, waiting for a free slot
+    RUNNING = "running"      # prefilled into a slot, decoding
+    FINISHED = "finished"    # budget exhausted or EOS emitted
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0   # 0 -> greedy argmax
+    top_k: int = 0             # 0 -> full distribution
+    seed: int = 0              # per-request sampling stream
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    eos_id: int | None = None
+    state: RequestState = RequestState.QUEUED
+    output_tokens: list[int] = field(default_factory=list)
+    # wall-clock metrics (perf_counter seconds)
+    arrival_time: float = field(default_factory=time.perf_counter)
+    first_token_time: float | None = None
+    finish_time: float | None = None
+    # engine-step metrics (deterministic; tests key on these)
+    arrival_step: int | None = None
+    first_token_step: int | None = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self._rng = np.random.default_rng(self.sampling.seed)
+
+    # ------------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        if len(self.output_tokens) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and self.output_tokens
+                and self.output_tokens[-1] == self.eos_id)
+
+    def total_len(self) -> int:
+        """Tokens the slot must hold: prompt + full decode budget."""
+        return int(self.prompt.size) + self.max_new_tokens
+
+    def ttft(self) -> float | None:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def select_token(self, logits: np.ndarray) -> int:
+        """Pick the next token from a (V,) float32 logits row."""
+        return select_token(logits, self.sampling, self._rng)
+
+
+def select_token(logits: np.ndarray, sampling: SamplingParams,
+                 rng: np.random.Generator) -> int:
+    logits = np.asarray(logits, np.float64).reshape(-1)
+    if sampling.temperature <= 0.0:
+        return int(np.argmax(logits))
+    z = logits / sampling.temperature
+    if sampling.top_k:
+        kth = np.partition(z, -sampling.top_k)[-sampling.top_k]
+        z = np.where(z < kth, -np.inf, z)
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(p.size, p=p))

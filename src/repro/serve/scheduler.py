@@ -1,0 +1,68 @@
+"""Iteration-level scheduler: which sequence runs in which slot, when.
+
+Continuous batching à la Orca/vLLM, specialized to ReLeQ serving: every
+engine step the scheduler (1) admits queued requests into free slots —
+*admissions happen mid-decode*, the running sequences never stop — and
+(2) reports the set of running sequences to pack into the next jit'd
+decode step.  Finished sequences release their slot in the same step, so
+a drained slot is refillable on the next iteration.
+
+The scheduler owns the bookkeeping (queue, slot pool, running table) and
+makes no model calls — the engine turns its decisions into prefill/decode
+launches.  Keeping the policy host-side means the device-side decode step
+stays a single fixed-shape executable regardless of traffic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.serve.cache import SlotCachePool
+from repro.serve.queue import AdmissionQueue
+from repro.serve.request import Request, RequestState
+
+
+@dataclass
+class RunningSeq:
+    """One admitted sequence: its request and the token to feed next."""
+
+    request: Request
+    slot: int
+    last_token: int
+
+
+class ContinuousScheduler:
+    def __init__(self, pool: SlotCachePool, queue: AdmissionQueue):
+        self.pool = pool
+        self.queue = queue
+        self.running: dict[int, RunningSeq] = {}  # slot -> sequence
+
+    # ------------------------------------------------------------------
+    @property
+    def num_running(self) -> int:
+        return len(self.running)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.running)
+
+    def admissions(self) -> list[tuple[Request, int]]:
+        """Pop queued requests into free slots (FIFO, one slot each)."""
+        admitted = []
+        while self.queue and self.pool.num_free:
+            req = self.queue.pop()
+            admitted.append((req, self.pool.alloc()))
+        return admitted
+
+    def start(self, request: Request, slot: int, first_token: int) -> None:
+        """Register a prefilled sequence as running."""
+        request.state = RequestState.RUNNING
+        self.running[slot] = RunningSeq(request, slot, first_token)
+
+    def advance(self, slot: int, token: int) -> None:
+        self.running[slot].last_token = token
+
+    def finish(self, slot: int) -> Request:
+        """Retire a sequence and free its slot for the next admission."""
+        seq = self.running.pop(slot)
+        seq.request.state = RequestState.FINISHED
+        self.pool.free(slot)
+        return seq.request

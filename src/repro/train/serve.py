@@ -103,3 +103,18 @@ def make_decode_step(model, donate: bool = True):
         return model.decode_step(sparams, cache, tokens)
 
     return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
+def make_prefill(model):
+    """jit'd prefill over serving-layout params.
+
+    ``max_len`` is static (it sizes the KV cache); each distinct prompt
+    length compiles once — the serve engine admits prompts at their exact
+    length to keep token-for-token parity with the unbatched path (prompt
+    bucketing is a recorded follow-up in ROADMAP.md).
+    """
+
+    def pre(sparams, tokens, max_len):
+        return model.prefill(sparams, tokens=tokens, max_len=max_len)
+
+    return jax.jit(pre, static_argnums=(2,))

@@ -8,3 +8,8 @@ os.environ.setdefault("REPRO_PALLAS", "ref")
 # see exactly 1 device (the dry-run owns the 512-device override).
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running (deselect with -m 'not slow')")

@@ -128,3 +128,28 @@ def test_ppo_learns_layer_sensitivity():
     bb = res.best_bits
     assert bb["L2"] >= 6
     assert np.mean([bb["L0"], bb["L1"], bb["L3"]]) <= 5.5
+
+
+def test_lm_env_evaluate_memoized():
+    """Repeated bit-vectors skip the short retrain (search.py memo-cache):
+    the second evaluate of the same policy consumes no training data."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.search import make_lm_env_factory
+    from repro.data import SyntheticLMData
+    from repro.models import build_model
+
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLMData(seed=0, global_batch=2, seq_len=16,
+                           vocab=cfg.vocab_size)
+    env = make_lm_env_factory(model, params, data, finetune_steps=1)(0)
+    bits = {g.name: 8 for g in model.quant_groups()}
+    first = env.evaluate(dict(bits))
+    cursor = data.state_dict()["index"]          # consumed by the retrain
+    assert env.evaluate(dict(bits)) == first     # memo hit
+    assert data.state_dict()["index"] == cursor  # ...without retraining
+    env.evaluate({**bits, "L00.attn.wq": 4})     # different vector
+    assert data.state_dict()["index"] > cursor   # -> retrains again

@@ -1,0 +1,87 @@
+"""Cost-model helpers: SQ metric bounds, hardware-time monotonicity in
+bits, and the speedup/energy ratios the serving benchmarks report."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.models.model import QuantGroup
+
+
+def _groups():
+    """Mixed profile: a big memory-bound matrix, small compute-heavy
+    ones — exercises both sides of the decode-time max()."""
+    mk = lambda name, nw, nm: QuantGroup(name, (name,), None, (nw,), nw, nm)
+    return [
+        mk("embed", 2_000_000, 0),
+        mk("wq", 500_000, 500_000 * 4096),
+        mk("mlp", 1_500_000, 1_500_000 * 4096),
+        mk("head", 250_000, 250_000 * 4096),
+    ]
+
+
+def _uniform(groups, b):
+    return np.full(len(groups), float(b))
+
+
+def test_state_of_quantization_bounds_and_identity():
+    g = _groups()
+    assert cm.state_of_quantization(_uniform(g, 8), g) == pytest.approx(1.0)
+    for b in (2, 3, 5):
+        sq = cm.state_of_quantization(_uniform(g, b), g)
+        assert 0.0 < sq < 1.0
+        assert sq == pytest.approx(b / 8.0)  # uniform policy: exact ratio
+    # clamping: "fp" groups above max_bits cost the same as max_bits
+    assert cm.state_of_quantization(_uniform(g, 16), g) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("time_fn,kw", [
+    (cm.stripes_time, {}),
+    (cm.tvm_cpu_time, {}),
+    (cm.tpu_decode_time, {}),
+    (cm.tpu_decode_time, {"batch": 8}),
+])
+def test_hardware_times_monotone_in_bits(time_fn, kw):
+    g = _groups()
+    times = [time_fn(_uniform(g, b), g, **kw) for b in range(2, 9)]
+    assert all(t > 0 for t in times)
+    assert all(a <= b for a, b in zip(times, times[1:]))  # nondecreasing
+
+
+def test_tpu_decode_time_memory_vs_compute_regimes():
+    g = _groups()
+    # batch=1 decode is weight-traffic bound: time strictly drops with bits
+    assert cm.tpu_decode_time(_uniform(g, 2), g) < cm.tpu_decode_time(
+        _uniform(g, 8), g)
+    # at huge batch the compute term dominates -> bits stop mattering
+    huge = {"batch": 10_000_000}
+    assert cm.tpu_decode_time(_uniform(g, 2), g, **huge) == pytest.approx(
+        cm.tpu_decode_time(_uniform(g, 8), g, **huge))
+
+
+def test_speedup_vs_8bit_ordering():
+    g = _groups()
+    for fn in (cm.stripes_time, cm.tvm_cpu_time, cm.tpu_decode_time):
+        s2 = cm.speedup_vs_8bit(fn, _uniform(g, 2), g)
+        s4 = cm.speedup_vs_8bit(fn, _uniform(g, 4), g)
+        s8 = cm.speedup_vs_8bit(fn, _uniform(g, 8), g)
+        assert s2 >= s4 >= s8 == pytest.approx(1.0)
+        assert s2 > 1.0
+    # bit-serial laws are exactly linear in weight bits
+    assert cm.speedup_vs_8bit(cm.stripes_time, _uniform(g, 2), g) == \
+        pytest.approx(4.0)
+    assert cm.speedup_vs_8bit(cm.tvm_cpu_time, _uniform(g, 4), g) == \
+        pytest.approx(2.0)
+
+
+def test_speedup_heterogeneous_policy():
+    g = _groups()
+    bits = np.array([8.0, 2.0, 4.0, 8.0])  # boundary groups kept at 8
+    s = cm.speedup_vs_8bit(cm.tpu_decode_time, bits, g)
+    assert 1.0 < s < cm.speedup_vs_8bit(cm.tpu_decode_time, _uniform(g, 2), g)
+
+
+def test_energy_reduction_vs_8bit():
+    g = _groups()
+    assert cm.energy_reduction_vs_8bit(_uniform(g, 8), g) == pytest.approx(1.0)
+    r4, r2 = (cm.energy_reduction_vs_8bit(_uniform(g, b), g) for b in (4, 2))
+    assert r2 > r4 > 1.0
