@@ -16,6 +16,8 @@ modes share one jit cache per policy; a warmup pass runs before timing.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -111,6 +113,33 @@ def bench(args) -> list[tuple[str, float, str]]:
     return rows
 
 
+def write_record(args, rows, path: str) -> dict:
+    """Persist the per-bitwidth static/continuous tokens/s so the perf
+    trajectory is comparable across PRs (CI and humans diff this file)."""
+    per_bits: dict[str, dict] = {}
+    for name, tps, derived in rows:
+        mode, b = name.replace("serve_", "").split("@")
+        per_bits.setdefault(b, {})[mode] = round(tps, 1)
+    for b, d in per_bits.items():
+        if "static" in d and "continuous" in d and d["static"] > 0:
+            d["continuous_vs_static"] = round(d["continuous"] / d["static"], 3)
+    rec = {
+        "benchmark": "serve_bench",
+        "arch": args.arch, "smoke": bool(args.smoke),
+        "requests": args.requests, "batch": args.batch,
+        "prompt_len": args.prompt_len, "gen": args.gen,
+        "tokens_per_s": per_bits,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "results",
+                           "BENCH_serve.json")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
@@ -122,11 +151,17 @@ def main() -> None:
                     help="static batch size == continuous slot count")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="JSON record path ('' disables)")
     args = ap.parse_args()
 
+    rows = bench(args)
     print("name,tokens_per_s,derived")
-    for name, tps, derived in bench(args):
+    for name, tps, derived in rows:
         print(f"{name},{tps:.1f},{derived}", flush=True)
+    if args.out:
+        write_record(args, rows, args.out)
+        print(f"wrote {args.out}", flush=True)
 
 
 if __name__ == "__main__":

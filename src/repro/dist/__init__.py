@@ -1,0 +1,47 @@
+"""repro.dist — the distribution layer: specs, collectives, elasticity.
+
+Why a package
+-------------
+ReLeQ's payoff is layer-wise low-bit policies executing fast on real
+hardware; at production scale that execution is *sharded*.  Three concerns
+live here, one file per concern:
+
+- ``sharding.py``   PartitionSpec rules for every leaf of every arch in
+  ``repro.configs`` — params, optimizer state, batches, decode caches —
+  profile-aware (tp / tp_sp / fsdp, see ``models.common.shard_profile``)
+  and divisibility-guarded, so the same rules serve the 1-device smoke
+  mesh, an 8-fake-device test mesh and the 512-chip multi-pod dry-run.
+- ``collectives.py`` ``compressed_allreduce``: gradient all-reduce whose
+  wire format is fp8 bitplanes (the communication analogue of the repo's
+  bitplane-packed weights) with error feedback, ≤5%% relative error vs an
+  exact psum.
+- ``elastic.py``    Restore a checkpoint written under any device count
+  onto the current mesh (4-chip save -> 8-chip restore and vice versa),
+  wrapping ``repro.ckpt``'s host-gathered layout.
+
+Consumers: ``launch/dryrun.py`` (compile-only roofline over every
+(arch x shape x mesh) cell), ``launch/train.py`` / ``train.trainer``
+(elastic restart), ``serve.cache.SlotCachePool`` (data-axis slot
+sharding), and the tier-1 tests ``tests/test_distributed.py`` /
+``tests/test_collectives.py``.
+"""
+from repro.dist.collectives import compressed_allreduce, compressed_allreduce_tree
+from repro.dist.elastic import restore_elastic
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+    state_specs,
+    to_named,
+)
+
+__all__ = [
+    "batch_specs",
+    "cache_specs",
+    "compressed_allreduce",
+    "compressed_allreduce_tree",
+    "param_specs",
+    "restore_elastic",
+    "state_specs",
+    "to_named",
+]

@@ -1,0 +1,93 @@
+"""Compressed all-reduce: fp8 all-gather phase with error feedback.
+
+The data-parallel gradient all-reduce moves 4 bytes/element per step; this
+module moves fp8 *planes* instead — the communication analogue of the
+repo's bitplane-packed weights (``quant/pack.py``): each shard compresses
+its local array into ``planes`` successive e4m3 payloads (value, then the
+residual of that rounding, ...), all-gathers the planes + their scalar
+scales, and reduces the dequantized sum.  Wire bytes: ``planes + 4/n_dev``
+per element vs 4 for an exact fp32 psum — 2x at the default 2 planes.
+
+Error feedback: what even the last plane could not represent is returned
+as the local residual ``fb`` for the caller to fold into the *next* step's
+input (``compressed_allreduce(g, axis, residual=fb)``), the standard EF
+construction that keeps compressed SGD unbiased over time.  With 2 planes
+the per-call relative error is ~0.1%% (bounded by the second plane's fp8
+step), comfortably inside the 5%% budget ``tests/test_collectives.py``
+pins against an exact psum.
+
+Must be called inside ``jax.shard_map`` (it uses named-axis collectives);
+payloads cross the wire as uint8 bitcasts so the fp8 dtype never has to
+be supported by the backend's collective kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_E4M3_MAX = 448.0
+
+
+def _fp8_planes(x: jax.Array, planes: int):
+    """x f32 -> (quantized planes [(q_u8, scale)], residual).
+
+    Plane 0 carries the value, plane i the rounding residual of planes
+    <i, each at its own per-plane scalar scale mapping max|.| -> e4m3 max.
+    """
+    qs, ss = [], []
+    r = x
+    for _ in range(planes):
+        s = jnp.maximum(jnp.max(jnp.abs(r)), 1e-30) / _E4M3_MAX
+        q = (r / s).astype(jnp.float8_e4m3fn)
+        qs.append(jax.lax.bitcast_convert_type(q, jnp.uint8))
+        ss.append(s)
+        r = r - q.astype(jnp.float32) * s
+    return jnp.stack(qs), jnp.stack(ss), r
+
+
+def compressed_allreduce(x: jax.Array, axis_name: str, *,
+                         residual: jax.Array | None = None,
+                         planes: int = 2, mean: bool = True):
+    """All-reduce ``x`` over ``axis_name`` through an fp8 wire format.
+
+    Returns ``(reduced, fb)``: the (mean by default) reduction of every
+    shard's *dequantized* planes, and this shard's local error-feedback
+    residual.  Pass ``fb`` back as ``residual`` on the next call so the
+    compression error averages out instead of accumulating.
+    """
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    q_u8, scales, fb = _fp8_planes(xf, planes)
+
+    # --- fp8 all-gather phase: planes as uint8 + scalar scales ---
+    gq = jax.lax.all_gather(q_u8, axis_name)      # (n, planes, ...)
+    gs = jax.lax.all_gather(scales, axis_name)    # (n, planes)
+    vals = jax.lax.bitcast_convert_type(
+        gq, jnp.float8_e4m3fn).astype(jnp.float32)
+    vals = vals * gs.reshape(gs.shape + (1,) * x.ndim)
+    out = jnp.sum(vals, axis=(0, 1))
+    if mean:
+        out = out / jax.lax.psum(1, axis_name)
+    return out.astype(x.dtype), fb.astype(x.dtype)
+
+
+def compressed_allreduce_tree(tree, axis_name: str, *, residuals=None,
+                              planes: int = 2, mean: bool = True):
+    """Per-leaf ``compressed_allreduce`` over a gradient pytree.
+
+    ``residuals`` is the matching error-feedback pytree from the previous
+    step (or None on step 0).  Returns ``(reduced_tree, residual_tree)``
+    — thread the residuals through the train step's carried state.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    res = (jax.tree_util.tree_leaves(residuals) if residuals is not None
+           else [None] * len(leaves))
+    outs, fbs = [], []
+    for leaf, r in zip(leaves, res):
+        o, f = compressed_allreduce(leaf, axis_name, residual=r,
+                                    planes=planes, mean=mean)
+        outs.append(o)
+        fbs.append(f)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, fbs))

@@ -1,0 +1,36 @@
+"""Elastic reshard: restore a checkpoint onto whatever mesh exists now.
+
+``repro.ckpt`` stores leaves host-gathered (full arrays, no per-device
+files), so elasticity is purely a *placement* problem: read the tree,
+cast each leaf to the template's dtype, and ``device_put`` it under the
+specs ``dist/sharding.py`` derives for the current mesh.  A 4-chip
+checkpoint restores onto 8 chips (or 256 -> 512) with no resharding
+pass — the cost is one host->device scatter, which a restart pays anyway.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import ckpt as ckpt_lib
+from repro.dist import sharding as shd
+
+
+def place(state, mesh, specs=None):
+    """device_put ``state`` under ``specs`` (derived when None)."""
+    specs = specs if specs is not None else shd.state_specs(state, mesh)
+    return jax.device_put(state, shd.to_named(specs, mesh))
+
+
+def restore_elastic(directory: str, like, mesh, *, specs=None,
+                    step: int | None = None):
+    """-> (state placed on ``mesh``, meta, step).
+
+    ``like`` is a template pytree (arrays or ShapeDtypeStructs) giving the
+    target structure and dtypes; the checkpoint may have been written
+    under any device count.  Raises FileNotFoundError when no checkpoint
+    exists — callers fall back to a fresh init.
+    """
+    tree, meta, step = ckpt_lib.restore(directory, step)
+    cast = jax.tree.map(lambda ref, a: jnp.asarray(a, ref.dtype), like, tree)
+    return place(cast, mesh, specs), meta, step

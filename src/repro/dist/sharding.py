@@ -1,0 +1,207 @@
+"""PartitionSpecs for every leaf the system moves: params, opt, batch, cache.
+
+One rule table instead of per-arch spec trees: a leaf is classified by the
+*names on its tree path* (``blocks/0/attn/wq``, ``blocks/tm/wo``,
+``.../moe/wg/planes``) so the same rules cover every layout the repo
+produces —
+
+- stacked training params (leading ``L_super`` axis from the scan),
+- unrolled serving params (per-layer lists of ``Packed`` bitplane weights,
+  whose ``planes``/``scale`` leaves inherit their matrix's rule),
+- optimizer moments (fp32 mirrors or int8 ``QTensor`` code blocks, which
+  inherit the parent parameter's rule through their path suffix).
+
+Profiles (``models.common.shard_profile``, env ``REPRO_SHARD_PROFILE``):
+
+- ``tp`` / ``tp_sp``: Megatron pairing — attention/MLP input projections
+  column-parallel (output dim on "model"), output projections row-parallel
+  (contraction dim on "model"); embed vocab-parallel; lm_head
+  vocab-parallel (matching the readout's ``constrain(..., "model")``);
+  MoE banks expert-parallel (E on "model", feeding ``moe._moe_ep``'s
+  all-to-all).
+- ``fsdp``: every matched weight shards its rule dim over *all* mesh axes
+  (ZeRO-3 layout; activations batch-shard over everything).
+
+Every placement passes a divisibility guard — an axis (or axis suffix)
+that does not divide the dim is dropped, never erred on — so glm4's
+kv=2 heads, a 251-token smoke vocab, or a batch-1 long-context decode all
+degrade to replication instead of failing to lower.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import shard_profile
+from repro.models.model import cache_batch_axis
+
+# (parent, matrix) -> column-parallel (shard the output/minor dim) or
+# row-parallel (shard the contraction dim).  Covers transformer attn/mlp,
+# hymba's mamba branch, and rwkv's time-mix/channel-mix blocks.
+_COL = {
+    ("attn", "wq"), ("attn", "wk"), ("attn", "wv"),
+    ("mlp", "wg"), ("mlp", "wu"), ("shared", "wg"), ("shared", "wu"),
+    ("ssm", "in_x"), ("ssm", "in_z"),
+    ("tm", "wr"), ("tm", "wk"), ("tm", "wv"), ("tm", "wg"),
+    ("cm", "wk"), ("cm", "wr"),
+}
+_ROW = {
+    ("attn", "wo"), ("mlp", "wd"), ("shared", "wd"), ("ssm", "out"),
+    ("tm", "wo"), ("cm", "wv"),
+}
+# norm/gain vectors: their gradient is reduced from "model"-sharded
+# activations, so GSPMD propagation lands their D dim on "model"; placing
+# them there keeps state_specs a fixed point of the compiled step (a
+# committed arg whose sharding drifts from in_shardings is a hard error)
+_NORM = {"ln1", "ln2", "final_norm", "gn"}
+# leaf attributes of container pytrees (Packed / QDQ / QTensor) that
+# inherit the parent matrix's rule rather than naming a matrix themselves
+_CONTAINER_ATTRS = ("planes", "scale", "w", "codes")
+
+
+def _key_name(entry) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _fit(dim: int, axes, sizes):
+    """Largest suffix of ``axes`` whose size product divides ``dim``
+    (same fallback constrain() uses), or None -> replicate this dim."""
+    axes = tuple(a for a in axes if a in sizes)
+    for start in range(len(axes)):
+        sub = axes[start:]
+        if dim % math.prod(sizes[a] for a in sub) == 0:
+            return sub[0] if len(sub) == 1 else sub
+    return None
+
+
+def _batch_mesh_axes(mesh) -> tuple[str, ...]:
+    axes = (("pod", "data", "model") if shard_profile() == "fsdp"
+            else ("pod", "data"))
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _leaf_spec(names: list[str], shape, mesh) -> P:
+    """Sharding rule for one leaf, by path names + shape."""
+    sizes = _mesh_sizes(mesh)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    core = [n for n in names if not n.isdigit() and n not in _CONTAINER_ATTRS]
+    mat = core[-1] if core else ""
+    parent = core[-2] if len(core) >= 2 else ""
+    leaf_attr = names[-1] if names else ""
+
+    if mat in _NORM:
+        dim, axes = nd - 1, ("model",)
+    elif mat == "router":
+        # router (L, D, E): D over the combined axes (what propagation
+        # picks — E is routing-critical and tiny, never sharded)
+        dim, axes = max(nd - 2, 0), ("data", "model")
+    elif parent == "moe" and mat in ("wg", "wu", "wd"):
+        # expert-parallel bank: E axis on "model" (feeds _moe_ep's a2a).
+        # raw (E,D,F) / packed planes (E,bits,K8,N) / scale (E,1,N): E=0;
+        # scan-stacked training bank (L_super, E, D, F): E=1.
+        dim = 1 if (leaf_attr not in _CONTAINER_ATTRS and nd == 4) else 0
+        axes = ("model",)
+    elif mat == "embed":
+        dim, axes = max(nd - 2, 0), ("model",)      # vocab rows
+    elif mat == "lm_head":
+        dim, axes = nd - 1, ("model",)              # vocab-parallel readout
+    elif (parent, mat) in _COL and nd >= 2:
+        dim, axes = nd - 1, ("model",)
+    elif (parent, mat) in _ROW and nd >= 2:
+        dim, axes = nd - 2, ("model",)
+    else:
+        # norms, routers, decay LoRAs, token-shift mixes, step counters:
+        # tiny and sensitivity-critical — replicated in every profile
+        return P()
+
+    if shard_profile() == "fsdp":
+        axes = tuple(mesh.axis_names)  # ZeRO-3: weights sharded over all
+    spec = [None] * nd
+    spec[dim] = _fit(shape[dim], axes, sizes)
+    return P(*spec)
+
+
+def param_specs(params, mesh):
+    """Pytree of PartitionSpec, one per array leaf of ``params``.
+
+    ``params`` may hold real arrays or ``ShapeDtypeStruct``s (the dry-run
+    lowers against ``launch/specs.py`` structs), in training, serving
+    (Packed/QDQ) or optimizer (QTensor) layout.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_leaf_spec([_key_name(k) for k in path], leaf.shape, mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_specs(state, mesh):
+    """Specs for a train state ``{"params": ..., "opt": ...}``.
+
+    Optimizer moments mirror their parameter's spec through the shared
+    path suffix (``opt/m/blocks/0/attn/wq`` matches the same rule as
+    ``params/blocks/0/attn/wq``); the step counter replicates.
+    """
+    return param_specs(state, mesh)
+
+
+def batch_specs(batch, mesh, *, seq_shard: bool = False):
+    """Specs for an input batch dict (tokens/labels/embeds/positions).
+
+    The batch dim shards over the profile's batch axes; ``seq_shard=True``
+    additionally puts the sequence dim on "model" (long-context prefill)
+    when the profile keeps "model" free of batch.
+    """
+    sizes = _mesh_sizes(mesh)
+    baxes = _batch_mesh_axes(mesh)
+    seq_ax = ("model" if seq_shard and "model" not in baxes
+              and "model" in sizes else None)
+
+    def spec(key, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        bdim = 1 if key == "positions" and nd == 3 else 0
+        s = [None] * nd
+        s[bdim] = _fit(leaf.shape[bdim], baxes, sizes)
+        if seq_ax and nd > bdim + 1 and leaf.shape[bdim + 1] % sizes["model"] == 0:
+            s[bdim + 1] = seq_ax
+        return P(*s)
+
+    return {k: spec(k, v) for k, v in batch.items()}
+
+
+def cache_specs(cache, mesh):
+    """Specs for a decode cache: the slot/batch axis (per-leaf position
+    from ``models.model.cache_batch_axis``) shards over the data axes;
+    heads/state dims stay local so decode needs no collectives."""
+    sizes = _mesh_sizes(mesh)
+    daxes = tuple(a for a in ("pod", "data") if a in sizes)
+
+    def spec(key, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        ax = cache_batch_axis(key)
+        s = [None] * nd
+        s[ax] = _fit(leaf.shape[ax], daxes, sizes)
+        return P(*s)
+
+    return {k: spec(k, v) for k, v in cache.items()}
+
+
+def to_named(specs, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree (device_put /
+    in_shardings-ready)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -34,11 +34,13 @@ def _log(msg):
     print(msg, flush=True)
 
 
+DEFAULT_PROFILE = {"train": "fsdp", "prefill": "tp", "decode": "tp"}
+
+
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *, serve_bits: int = 4,
              remat: str = "full", out_dir: str | None = None,
-             seq_shard: bool | None = None, profile: str = "tp",
+             seq_shard: bool | None = None, profile: str | None = None,
              tag: str = "") -> dict:
-    os.environ["REPRO_SHARD_PROFILE"] = profile
     from repro.configs import SHAPES, cell_is_runnable, get_config
     from repro.dist import sharding as shd
     from repro.launch import specs as S
@@ -50,6 +52,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, serve_bits: int = 4,
     from repro.train.train_step import make_eval_step  # noqa: F401 (import check)
 
     shape = SHAPES[shape_name]
+    # per-kind default (train: fsdp — the layout that fits every arch in
+    # 16 GB; serve cells: tp); shard_profile() reads the env var lazily
+    profile = profile or DEFAULT_PROFILE[shape.kind]
+    os.environ["REPRO_SHARD_PROFILE"] = profile
     ok, reason = cell_is_runnable(arch, shape_name)
     if not ok:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
@@ -138,6 +144,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, serve_bits: int = 4,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()  # XLA:CPU: while bodies counted ONCE
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     costs = analyze_hlo(compiled.as_text())  # loop-corrected (see hlo_analysis)
     rl = roofline_from_costs(costs, chips=chips, model_flops=model_flops)
 
@@ -176,9 +184,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, serve_bits: int = 4,
         with open(fn, "w") as f:
             json.dump(rec, f, indent=2)
     return rec
-
-
-DEFAULT_PROFILE = {"train": "fsdp", "prefill": "tp", "decode": "tp"}
 
 
 def run_all(meshes=("pod", "multipod"), out_dir=RESULTS_DIR, archs=None,

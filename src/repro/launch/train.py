@@ -38,7 +38,16 @@ def main():
     ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="mesh shape over local devices, e.g. '2,4'; enables "
+                         "sharded training + elastic checkpoint restore")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = jax.make_mesh(shape, ("data", "model")[:len(shape)],
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -57,11 +66,18 @@ def main():
     state = init_state(model, opt, jax.random.PRNGKey(args.seed))
     step_fn = make_train_step(model, opt, remat=args.remat)
     trainer = Trainer(model=model, optimizer=opt, data=data, step_fn=step_fn,
-                      bits_map=bits_map, ckpt_dir=args.ckpt_dir)
+                      bits_map=bits_map, ckpt_dir=args.ckpt_dir, mesh=mesh)
     n = sum(x.size for x in jax.tree.leaves(state["params"]))
     print(f"training {args.arch} ({n/1e6:.1f}M params, QAT "
-          f"avg {policy.average_bits():.1f} bits) for {args.steps} steps")
-    trainer.run(state, args.steps)
+          f"avg {policy.average_bits():.1f} bits) for {args.steps} steps"
+          + (f" on mesh {mesh.shape}" if mesh is not None else ""))
+    if mesh is not None:
+        from repro.dist import elastic
+
+        with jax.set_mesh(mesh):
+            trainer.run(elastic.place(state, mesh), args.steps)
+    else:
+        trainer.run(state, args.steps)
 
 
 if __name__ == "__main__":

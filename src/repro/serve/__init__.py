@@ -52,9 +52,16 @@ Guarantees
 - Slot alloc/free is exact: no double-alloc, no double-free, finished
   slots reusable the next step.
 
+Sharding: pass ``mesh=`` to ``ServeEngine`` (or ``SlotCachePool``) and the
+slot pool is placed over the mesh's data axes via ``repro.dist`` — decode
+cache updates stay shard-local (parity pinned in
+``tests/test_distributed.py::test_sharded_slot_pool_parity``).  Admission
+is still a single-host decision; making it collective across hosts is the
+recorded ROADMAP follow-up.
+
 Known limits (ROADMAP "Open items"): greedy/temperature sampling only,
-prefill recompiles per distinct prompt length (no bucketing yet), single
-host (no sharded slot pool).
+prefill recompiles per distinct prompt length (no bucketing yet),
+single-host admission.
 """
 from repro.serve.cache import SlotCachePool
 from repro.serve.engine import ServeEngine

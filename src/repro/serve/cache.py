@@ -40,12 +40,25 @@ _splice_jit = jax.jit(_splice, donate_argnums=(0,))
 
 
 class SlotCachePool:
-    def __init__(self, model, num_slots: int, max_len: int, dtype=None):
+    def __init__(self, model, num_slots: int, max_len: int, dtype=None,
+                 mesh=None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.num_slots = num_slots
         self.max_len = max_len
+        self.mesh = mesh
         self.cache = model.init_cache(num_slots, max_len, dtype)
+        if mesh is not None:
+            # data-axis sharding hook: slots live distributed over the
+            # mesh's data axes (dist/sharding.cache_specs gives the slot
+            # axis per leaf); splice/decode updates then stay in place on
+            # the owning shard.  Decode is row-independent, so a slot's
+            # tokens are identical wherever its rows are placed.
+            from repro.dist import sharding as shd
+
+            self.cache = jax.device_put(
+                self.cache, shd.to_named(shd.cache_specs(self.cache, mesh),
+                                         mesh))
         self._free = list(range(num_slots - 1, -1, -1))  # pop() -> lowest id
         self._active: set[int] = set()
 

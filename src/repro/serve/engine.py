@@ -34,10 +34,12 @@ from repro.train.serve import make_decode_step, make_prefill
 class ServeEngine:
     def __init__(self, model, sparams, *, num_slots: int = 8,
                  max_len: int = 256, max_pending: int = 0,
-                 decode_fn=None, prefill_fn=None):
+                 decode_fn=None, prefill_fn=None, mesh=None):
         self.model = model
         self.sparams = sparams
-        self.pool = SlotCachePool(model, num_slots, max_len)
+        # mesh != None places the KV slot pool over the mesh's data axes
+        # (repro.dist sharding hook) — decode updates stay shard-local
+        self.pool = SlotCachePool(model, num_slots, max_len, mesh=mesh)
         self.queue = AdmissionQueue(max_pending)
         self.scheduler = ContinuousScheduler(self.pool, self.queue)
         # decode_fn/prefill_fn let callers share one jit cache across

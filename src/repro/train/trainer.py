@@ -10,8 +10,11 @@ Production behaviors implemented (and unit-tested):
   EMA; a step slower than ``straggler_factor ×`` EMA increments a counter
   and fires ``on_straggler`` (on a real fleet: re-issue the step / evict
   the slow host; here: logged + surfaced in metrics so tests can assert).
-- **elastic scaling**: on restore the data pipeline can be re-sharded to a
-  different host count (dist/elastic.py handles array re-placement).
+- **elastic scaling**: construct the Trainer with ``mesh=`` and restore
+  goes through ``dist/elastic.py`` — a checkpoint written under any device
+  count is re-placed under the specs ``dist/sharding.py`` derives for the
+  *current* mesh (4-chip save -> 8-chip restart); the data pipeline
+  re-shards itself from the same meta.
 - **NaN quarantine**: a non-finite loss aborts the step, reloads the last
   checkpoint and skips the offending batch — cheap insurance at 1000-node
   scale where a single bad host can poison the run.
@@ -35,6 +38,7 @@ class Trainer:
     step_fn: object                   # jitted (state, batch, bits_map) -> (state, metrics)
     bits_map: dict
     ckpt_dir: str | None = None
+    mesh: object = None               # != None: elastic restore onto this mesh
     ckpt_interval: int = 50
     straggler_factor: float = 3.0
     on_straggler: object = None
@@ -51,16 +55,29 @@ class Trainer:
                             "bits_map": {k: np.asarray(v).tolist()
                                          for k, v in self.bits_map.items()}})
 
+    def _reload(self, state):
+        """-> (restored state, meta, step); mesh-aware placement when the
+        Trainer has one (shared by restart and the NaN quarantine — a
+        quarantine reload must come back under the same sharding specs or
+        the next step recompiles against a replicated layout)."""
+        if self.mesh is not None:
+            from repro.dist.elastic import restore_elastic
+
+            return restore_elastic(self.ckpt_dir, state, self.mesh)
+        tree, meta, step = ckpt_lib.restore(self.ckpt_dir)
+        restored = jax.tree.map(
+            lambda ref, a: jax.numpy.asarray(a, ref.dtype), state, tree)
+        return restored, meta, step
+
     def try_restore(self, state):
         """-> (state, start_step); falls back to the given fresh state."""
         if self.ckpt_dir is None:
             return state, 0
         try:
-            tree, meta, step = ckpt_lib.restore(self.ckpt_dir)
+            restored, meta, step = self._reload(state)
         except FileNotFoundError:
             return state, 0
         self.data.load_state_dict(meta["data"])
-        restored = jax.tree.map(lambda ref, a: jax.numpy.asarray(a, ref.dtype), state, tree)
         return restored, step
 
     _warmup: int = 0
@@ -94,10 +111,7 @@ class Trainer:
             if not np.isfinite(loss):
                 # NaN quarantine: reload last checkpoint, skip this batch
                 if self.ckpt_dir is not None and ckpt_lib.latest_step(self.ckpt_dir) is not None:
-                    tree, meta, ck_step = ckpt_lib.restore(self.ckpt_dir)
-                    state = jax.tree.map(lambda ref, a: jax.numpy.asarray(a, ref.dtype),
-                                         state, tree)
-                    step = ck_step
+                    state, _, step = self._reload(state)
                 self.data.index += 1  # skip the poisoned batch
                 continue
             state = new_state

@@ -6,13 +6,10 @@ import textwrap
 
 import pytest
 
-# the module under test was never part of the seed (ROADMAP open item);
-# skip — not fail — until it lands
-pytest.importorskip("repro.dist")
-
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
+@pytest.mark.slow
 def test_compressed_allreduce_matches_psum():
     code = """
     import jax, jax.numpy as jnp, numpy as np
@@ -41,6 +38,51 @@ def test_compressed_allreduce_matches_psum():
     assert float(jnp.max(jnp.abs(fb))) < 0.1
     print("OK", rel)
     """
+    _run(code)
+
+
+@pytest.mark.slow
+def test_error_feedback_residual_converges():
+    """Threading the residual back in (EF) makes the *time-average* of
+    repeated 1-plane compressed reductions approach the exact mean — the
+    property that keeps compressed-gradient SGD unbiased."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collectives import compressed_allreduce
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(8, 512)),
+                    jnp.float32)
+
+    def f(x, fb):
+        def local(xs, fbs):
+            out, fb2 = compressed_allreduce(xs[0], "data",
+                                            residual=fbs[0], planes=1)
+            return out[None], fb2[None]
+        return jax.shard_map(local, mesh=mesh,
+                             in_specs=(P("data", None), P("data", None)),
+                             out_specs=(P("data", None), P("data", None)))(x, fb)
+
+    jf = jax.jit(f)
+    want = np.mean(np.asarray(x), axis=0)
+    with jax.set_mesh(mesh):
+        fb = jnp.zeros_like(x)
+        outs = []
+        for _ in range(8):
+            out, fb = jf(x, fb)
+            outs.append(np.asarray(out[0]))
+    first = np.abs(outs[0] - want).max() / np.abs(want).max()
+    avg = np.abs(np.mean(outs, axis=0) - want).max() / np.abs(want).max()
+    assert avg < first / 2, (first, avg)   # EF averages the bias away
+    assert avg < 0.02, avg
+    print("OK", first, avg)
+    """
+    _run(code)
+
+
+def _run(code: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = SRC

@@ -8,7 +8,8 @@ try:
 except ImportError:  # container lacks hypothesis: skip ONLY property tests
     import types
 
-    st = types.SimpleNamespace(integers=lambda *a, **k: None)
+    st = types.SimpleNamespace(integers=lambda *a, **k: None,
+                               sampled_from=lambda *a, **k: None)
 
     def given(*a, **k):
         return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
@@ -102,6 +103,44 @@ class TestPack:
         codes, _ = quantize_to_int(jnp.ones((12, 4)), 4)
         with pytest.raises(ValueError):
             pack_bitplanes(codes, 4)
+
+
+class TestPackProperties:
+    """Property-based pack→unpack round-trips (the serving path's one
+    lossless stage: whatever codes go onto the wire must come back
+    bit-exact for every bitwidth, shape and source dtype)."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(bits=st.sampled_from([2, 3, 4, 5, 8]), rows8=st.integers(1, 9),
+           cols=st.integers(1, 37), seed=st.integers(0, 2 ** 16))
+    def test_codes_roundtrip_bit_exact(self, bits, rows8, cols, seed):
+        """Any in-range signed code tensor survives pack→unpack exactly
+        (odd column counts exercise the non-tiled minor dim)."""
+        n = 2 ** (bits - 1) - 1
+        codes = np.random.default_rng(seed).integers(
+            -n, n + 1, (rows8 * 8, cols), dtype=np.int32)
+        back = unpack_bitplanes(pack_bitplanes(jnp.asarray(codes), bits), bits)
+        np.testing.assert_array_equal(codes, np.asarray(back))
+
+    @settings(max_examples=40, deadline=None)
+    @given(bits=st.sampled_from([2, 3, 4, 5, 8]),
+           rows=st.integers(1, 41), cols=st.integers(1, 19),
+           dtype=st.sampled_from(["float32", "bfloat16", "float16"]),
+           seed=st.integers(0, 999))
+    def test_quantize_pack_roundtrip_odd_shapes(self, bits, rows, cols,
+                                                dtype, seed):
+        """Float weights at odd shapes/dtypes: pad→quantize→pack→unpack
+        reproduces the quantized codes exactly, padding rows stay zero."""
+        from repro.quant.pack import pad_contraction_to_8
+
+        w = np.random.default_rng(seed).normal(size=(rows, cols))
+        wp = jnp.asarray(pad_contraction_to_8(w.astype(np.float32)),
+                         jnp.dtype(dtype))
+        codes, _ = quantize_to_int(wp, bits, axis=0)
+        back = unpack_bitplanes(pack_bitplanes(codes, bits), bits)
+        np.testing.assert_array_equal(np.asarray(codes, np.int32),
+                                      np.asarray(back))
+        assert np.all(np.asarray(back)[rows:] == 0)  # pad rows quantize to 0
 
 
 class TestPolicy:
