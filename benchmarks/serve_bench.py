@@ -1,17 +1,28 @@
-# Static vs continuous batching tokens/s at ReLeQ bitwidth policies.
+# Static vs continuous (slot/paged) batching tokens/s at ReLeQ policies.
 """Serving benchmark: ``python -m benchmarks.serve_bench [--arch glm4-9b]``.
 
-One workload of requests with heterogeneous output lengths, served two
+One workload of requests with heterogeneous output lengths, served three
 ways at each ``--bits`` policy:
 
 - **static**: the legacy fixed-batch loop — each batch decodes until its
   *longest* member finishes, early finishers idle their slot,
-- **continuous**: :class:`repro.serve.ServeEngine` — finished slots are
-  refilled from the queue on the very next step.
+- **continuous**: :class:`repro.serve.ServeEngine` with the legacy slot
+  pool — finished slots refilled from the queue on the very next step,
+- **paged**: the block-granular engine with chunked prefill.
+
+A separate *mixed-prompt-length* section pins the paged engine's two
+structural wins and records them in ``BENCH_serve.json``:
+
+- compile churn: the paged engine compiles exactly ONE prefill and ONE
+  decode executable for any prompt-length mix (jit cache counters
+  asserted), while the slot engine compiles a prefill per distinct
+  length;
+- memory: at EQUAL paged-leaf cache bytes the paged pool serves strictly
+  more concurrent sequences than the slot pool.
 
 Prints ``name,tokens_per_s,derived`` CSV rows (useful tokens only — a
-finished sequence's padding steps never count for either mode).  Both
-modes share one jit cache per policy; a warmup pass runs before timing.
+finished sequence's padding steps never count for any mode).  All modes
+share one jit cache per policy; a warmup pass runs before timing.
 """
 from __future__ import annotations
 
@@ -28,7 +39,12 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.quant.qat import policy_for
 from repro.serve import ServeEngine
-from repro.train.serve import make_decode_step, make_prefill, quantize_for_serving
+from repro.train.serve import (
+    make_chunked_prefill,
+    make_decode_step,
+    make_prefill,
+    quantize_for_serving,
+)
 
 
 def make_workload(n: int, prompt_len: int, gen: int, vocab: int, seed: int = 0):
@@ -62,16 +78,82 @@ def run_static(model, sparams, prompts, gens, batch, max_len,
 
 
 def run_continuous(model, sparams, prompts, gens, num_slots, max_len,
-                   prefill_fn, decode_fn) -> dict:
+                   prefill_fn, decode_fn, **kw) -> dict:
     engine = ServeEngine(model, sparams, num_slots=num_slots,
                          max_len=max_len, decode_fn=decode_fn,
-                         prefill_fn=prefill_fn)
+                         prefill_fn=prefill_fn, **kw)
     for p, g in zip(prompts, gens):
         engine.submit(p, int(g) + 1)
     return engine.run_until_drained()
 
 
-def bench(args) -> list[tuple[str, float, str]]:
+def run_paged_mixed(model, sparams, cfg, args) -> dict:
+    """Mixed-prompt-length section: slot vs paged at equal KV bytes.
+
+    Asserts the paged engine's acceptance contract — exactly one prefill
+    and one decode executable for the whole length mix (jit cache
+    counters), and strictly more concurrent sequences than the slot pool
+    at an equal-or-smaller KV-byte budget — and returns the numbers for
+    ``BENCH_serve.json``.
+    """
+    rng = np.random.default_rng(2)
+    n = args.requests
+    max_len = args.prompt_len + args.gen + 1
+    bs = args.block_size
+    plens = np.linspace(2, args.prompt_len, n).round().astype(int)
+    prompts = [rng.integers(0, cfg.vocab_size, int(l)) for l in plens]
+    gens = rng.permutation(
+        np.linspace(max(1, args.gen // 4), args.gen, n).round().astype(int))
+    # equal-bytes budget: paged pool (incl the garbage block) holds at most
+    # floor(slot tokens / bs) blocks — never MORE KV bytes than the slot pool
+    num_blocks = args.batch * max_len // bs
+    setups = {
+        "slot": dict(cache="slot", num_slots=args.batch),
+        "paged": dict(cache="paged", num_slots=2 * args.batch,
+                      block_size=bs, num_blocks=num_blocks,
+                      prefill_chunk=args.prefill_chunk),
+    }
+    out = {}
+    for kind, kw in setups.items():
+        prefill_fn = (make_chunked_prefill(model, donate=False)
+                      if kind == "paged" else make_prefill(model))
+        decode_fn = make_decode_step(model, donate=False)
+
+        def drive():
+            eng = ServeEngine(model, sparams, max_len=max_len,
+                              prefill_fn=prefill_fn, decode_fn=decode_fn,
+                              **kw)
+            for p, g in zip(prompts, gens):
+                eng.submit(p, int(g) + 1)
+            peak = 0
+            t0 = time.perf_counter()
+            while eng.scheduler.has_work():
+                eng.step()
+                peak = max(peak, eng.num_running)
+            return eng, peak, time.perf_counter() - t0
+
+        drive()  # warmup: all compiles land outside timing (same shapes,
+        #          so the executable counters below are unchanged)
+        eng, peak, dt = drive()
+        m = eng.metrics()
+        out[kind] = {
+            "prefill_executables": prefill_fn._cache_size(),
+            "decode_executables": decode_fn._cache_size(),
+            "peak_concurrent": peak,
+            "kv_bytes": eng.pool.cache_bytes(),
+            "tokens_per_s": round(m["tokens_total"] / dt, 1),
+            "preemptions": m.get("preemptions", 0),
+        }
+    assert out["paged"]["prefill_executables"] == 1, out
+    assert out["paged"]["decode_executables"] == 1, out
+    assert out["paged"]["kv_bytes"] <= out["slot"]["kv_bytes"], out
+    assert out["paged"]["peak_concurrent"] > out["slot"]["peak_concurrent"], out
+    out["distinct_prompt_lens"] = len(set(int(l) for l in plens))
+    return out
+
+
+def bench(args):
+    """-> (csv rows, (cfg, model, sparams at args.bits[0]) for reuse)."""
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -79,9 +161,12 @@ def bench(args) -> list[tuple[str, float, str]]:
                                   cfg.vocab_size)
     max_len = args.prompt_len + args.gen + 1
     rows = []
+    first_sparams = None
     for bits in args.bits:
         sparams = quantize_for_serving(model, params,
                                        policy_for(model, default_bits=bits))
+        if first_sparams is None:
+            first_sparams = sparams
         prefill_fn = make_prefill(model)
         # static batch == num_slots -> identical decode executable
         decode_fn = make_decode_step(model, donate=False)
@@ -91,11 +176,17 @@ def bench(args) -> list[tuple[str, float, str]]:
         warm_sizes = {args.batch}
         if args.requests % args.batch:
             warm_sizes.add(args.requests % args.batch)
+        chunk_fn = make_chunked_prefill(model, donate=False)
         for b in warm_sizes:
             run_static(model, sparams, prompts[:b], np.minimum(gens[:b], 2),
                        b, max_len, prefill_fn, decode_fn)
         run_continuous(model, sparams, prompts[:2], np.minimum(gens[:2], 2),
-                       args.batch, max_len, prefill_fn, decode_fn)
+                       args.batch, max_len, prefill_fn, decode_fn,
+                       cache="slot")
+        run_continuous(model, sparams, prompts[:2], np.minimum(gens[:2], 2),
+                       args.batch, max_len, chunk_fn, decode_fn,
+                       cache="paged", block_size=args.block_size,
+                       prefill_chunk=args.prefill_chunk)
 
         dt, total = run_static(model, sparams, prompts, gens, args.batch,
                                max_len, prefill_fn, decode_fn)
@@ -104,18 +195,29 @@ def bench(args) -> list[tuple[str, float, str]]:
                      f"tokens={total};batch={args.batch}"))
 
         m = run_continuous(model, sparams, prompts, gens, args.batch,
-                           max_len, prefill_fn, decode_fn)
+                           max_len, prefill_fn, decode_fn, cache="slot")
         tps_cont = m["tokens_per_s"]
         rows.append((f"serve_continuous@{bits}b", tps_cont,
                      f"tokens={m['tokens_total']};"
                      f"occupancy={m['mean_occupancy']:.2f};"
                      f"vs_static={tps_cont / max(tps_static, 1e-9):.2f}x"))
-    return rows
+
+        m = run_continuous(model, sparams, prompts, gens, args.batch,
+                           max_len, chunk_fn, decode_fn, cache="paged",
+                           block_size=args.block_size,
+                           prefill_chunk=args.prefill_chunk)
+        tps_paged = m["tokens_per_s"]
+        rows.append((f"serve_paged@{bits}b", tps_paged,
+                     f"tokens={m['tokens_total']};"
+                     f"block_occ={m['mean_block_occupancy']:.2f};"
+                     f"vs_static={tps_paged / max(tps_static, 1e-9):.2f}x"))
+    return rows, (cfg, model, first_sparams)
 
 
-def write_record(args, rows, path: str) -> dict:
-    """Persist the per-bitwidth static/continuous tokens/s so the perf
-    trajectory is comparable across PRs (CI and humans diff this file)."""
+def write_record(args, rows, path: str, paged_mixed: dict | None = None) -> dict:
+    """Persist the per-bitwidth static/continuous/paged tokens/s plus the
+    mixed-prompt-length paged section so the perf trajectory is comparable
+    across PRs (CI uploads this file as an artifact; humans diff it)."""
     per_bits: dict[str, dict] = {}
     for name, tps, derived in rows:
         mode, b = name.replace("serve_", "").split("@")
@@ -123,13 +225,18 @@ def write_record(args, rows, path: str) -> dict:
     for b, d in per_bits.items():
         if "static" in d and "continuous" in d and d["static"] > 0:
             d["continuous_vs_static"] = round(d["continuous"] / d["static"], 3)
+        if "static" in d and "paged" in d and d["static"] > 0:
+            d["paged_vs_static"] = round(d["paged"] / d["static"], 3)
     rec = {
         "benchmark": "serve_bench",
         "arch": args.arch, "smoke": bool(args.smoke),
         "requests": args.requests, "batch": args.batch,
         "prompt_len": args.prompt_len, "gen": args.gen,
+        "block_size": args.block_size, "prefill_chunk": args.prefill_chunk,
         "tokens_per_s": per_bits,
     }
+    if paged_mixed is not None:
+        rec["paged_mixed_prompts"] = paged_mixed
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -151,16 +258,29 @@ def main() -> None:
                     help="static batch size == continuous slot count")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="paged engine: fixed prefill chunk length")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON record path ('' disables)")
     args = ap.parse_args()
 
-    rows = bench(args)
+    rows, (cfg, model, sparams) = bench(args)
     print("name,tokens_per_s,derived")
     for name, tps, derived in rows:
         print(f"{name},{tps:.1f},{derived}", flush=True)
+    mixed = run_paged_mixed(model, sparams, cfg, args)
+    print(f"paged_mixed: prefill_executables="
+          f"{mixed['paged']['prefill_executables']} "
+          f"(slot compiled {mixed['slot']['prefill_executables']} for "
+          f"{mixed['distinct_prompt_lens']} lengths), "
+          f"peak_concurrent paged={mixed['paged']['peak_concurrent']} "
+          f"vs slot={mixed['slot']['peak_concurrent']} at "
+          f"kv_bytes {mixed['paged']['kv_bytes']} <= "
+          f"{mixed['slot']['kv_bytes']}", flush=True)
     if args.out:
-        write_record(args, rows, args.out)
+        write_record(args, rows, args.out, paged_mixed=mixed)
         print(f"wrote {args.out}", flush=True)
 
 

@@ -47,17 +47,34 @@ def _fp8_planes(x: jax.Array, planes: int):
 
 def compressed_allreduce(x: jax.Array, axis_name: str, *,
                          residual: jax.Array | None = None,
-                         planes: int = 2, mean: bool = True):
+                         planes: int = 2, mean: bool = True,
+                         axis_size: int | None = None):
     """All-reduce ``x`` over ``axis_name`` through an fp8 wire format.
 
     Returns ``(reduced, fb)``: the (mean by default) reduction of every
     shard's *dequantized* planes, and this shard's local error-feedback
     residual.  Pass ``fb`` back as ``residual`` on the next call so the
     compression error averages out instead of accumulating.
+
+    Two constructions:
+
+    - ``axis_size=None`` (PR-2 original): all-gather every shard's planes
+      and reduce locally.  Simple, but each device *receives* ``n·planes``
+      bytes/element — it loses to an exact ring all-reduce beyond n ≈ 4.
+    - ``axis_size=n`` (static shard count): bandwidth-optimal two-phase
+      reduce-scatter/all-gather analogue.  Compress → all-to-all chunk
+      exchange → decompress-and-reduce own chunk → re-compress → all-gather
+      — ``≈ 2·planes·(n-1)/n`` send bytes/element, n-independent, vs
+      ``8·(n-1)/n`` for the exact fp32 ring (2.0x at the default 2 planes;
+      measured from HLO by ``launch/dryrun.py --dp-collectives``).  The
+      stage-2 (reduced-chunk) quantization error is folded into this
+      shard's slice of ``fb`` alongside the stage-1 residual.
     """
     xf = x.astype(jnp.float32)
     if residual is not None:
         xf = xf + residual.astype(jnp.float32)
+    if axis_size is not None:
+        return _compressed_rs_ag(x, xf, axis_name, planes, mean, axis_size)
     q_u8, scales, fb = _fp8_planes(xf, planes)
 
     # --- fp8 all-gather phase: planes as uint8 + scalar scales ---
@@ -72,13 +89,49 @@ def compressed_allreduce(x: jax.Array, axis_name: str, *,
     return out.astype(x.dtype), fb.astype(x.dtype)
 
 
+def _compressed_rs_ag(x, xf, axis_name: str, planes: int, mean: bool,
+                      n: int):
+    """Two-phase compressed all-reduce (see compressed_allreduce)."""
+    shape = x.shape
+    flat = xf.reshape(-1)
+    c = -(-flat.size // n)
+    flatp = jnp.pad(flat, (0, n * c - flat.size))
+    q_u8, scales, fb1 = _fp8_planes(flatp.reshape(n, c), planes)
+    # phase 1: chunk j of every shard travels to device j (compressed)
+    gq = jax.lax.all_to_all(q_u8, axis_name, split_axis=1, concat_axis=1,
+                            tiled=True)            # (planes, n, c): peer-major
+    gs = jax.lax.all_gather(scales, axis_name)     # (n, planes)
+    vals = jax.lax.bitcast_convert_type(
+        gq, jnp.float8_e4m3fn).astype(jnp.float32)
+    mine = jnp.sum(vals * gs.T[:, :, None], axis=(0, 1))   # (c,) reduced
+    if mean:
+        mine = mine / n
+    # phase 2: re-compress the reduced chunk, all-gather all chunks
+    q2, s2, fb2 = _fp8_planes(mine, planes)
+    gq2 = jax.lax.all_gather(q2, axis_name)        # (n, planes, c)
+    gs2 = jax.lax.all_gather(s2, axis_name)        # (n, planes)
+    out = jnp.sum(jax.lax.bitcast_convert_type(
+        gq2, jnp.float8_e4m3fn).astype(jnp.float32)
+        * gs2[..., None], axis=1)                  # (n, c)
+    out = out.reshape(-1)[:flat.size].reshape(shape)
+    # error feedback: stage-1 residual everywhere + this shard's stage-2
+    # residual at its own chunk (scaled back up if the wire carried means)
+    me = jax.lax.axis_index(axis_name)
+    fb = fb1.at[me].add(fb2 * (n if mean else 1))
+    fb = fb.reshape(-1)[:flat.size].reshape(shape)
+    return out.astype(x.dtype), fb.astype(x.dtype)
+
+
 def compressed_allreduce_tree(tree, axis_name: str, *, residuals=None,
-                              planes: int = 2, mean: bool = True):
+                              planes: int = 2, mean: bool = True,
+                              axis_size: int | None = None):
     """Per-leaf ``compressed_allreduce`` over a gradient pytree.
 
     ``residuals`` is the matching error-feedback pytree from the previous
     step (or None on step 0).  Returns ``(reduced_tree, residual_tree)``
-    — thread the residuals through the train step's carried state.
+    — thread the residuals through the train step's carried state
+    (``train_step.make_dp_train_step`` carries them as ``state["ef"]``).
+    ``axis_size`` selects the two-phase wire-optimal construction.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     res = (jax.tree_util.tree_leaves(residuals) if residuals is not None
@@ -86,7 +139,8 @@ def compressed_allreduce_tree(tree, axis_name: str, *, residuals=None,
     outs, fbs = [], []
     for leaf, r in zip(leaves, res):
         o, f = compressed_allreduce(leaf, axis_name, residual=r,
-                                    planes=planes, mean=mean)
+                                    planes=planes, mean=mean,
+                                    axis_size=axis_size)
         outs.append(o)
         fbs.append(f)
     return (jax.tree_util.tree_unflatten(treedef, outs),

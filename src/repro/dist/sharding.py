@@ -126,10 +126,35 @@ def _leaf_spec(names: list[str], shape, mesh) -> P:
         return P()
 
     if shard_profile() == "fsdp":
-        axes = tuple(mesh.axis_names)  # ZeRO-3: weights sharded over all
+        # ZeRO-3: shard over ALL axes — and when the rule dim doesn't
+        # divide the full device count (glm4's d_ff = 13696 on 256 chips
+        # degrades to 16-way), fall back to whichever dim shards widest:
+        # the weight/grad/moment bytes per device are what fsdp exists to
+        # bound, not which dim they split on
+        axes = tuple(mesh.axis_names)
+
+        def width(fit):
+            names = (fit,) if isinstance(fit, str) else tuple(fit or ())
+            return math.prod(sizes[a] for a in names)
+
+        fit = _fit(shape[dim], axes, sizes)
+        if width(fit) < math.prod(sizes[a] for a in axes):
+            for d in sorted(range(nd), key=lambda d: -shape[d]):
+                alt = _fit(shape[d], axes, sizes)
+                if width(alt) > width(fit):
+                    dim, fit = d, alt
+        spec = [None] * nd
+        spec[dim] = fit
+        return P(*spec)
     spec = [None] * nd
     spec[dim] = _fit(shape[dim], axes, sizes)
     return P(*spec)
+
+
+def leaf_spec(path_names: list, shape, mesh) -> P:
+    """Public single-leaf rule lookup (``quant/qat.py`` uses it to anchor
+    the QDQ scale/output sharding inside the train step)."""
+    return _leaf_spec([str(n) for n in path_names], shape, mesh)
 
 
 def param_specs(params, mesh):
@@ -184,13 +209,17 @@ def batch_specs(batch, mesh, *, seq_shard: bool = False):
 def cache_specs(cache, mesh):
     """Specs for a decode cache: the slot/batch axis (per-leaf position
     from ``models.model.cache_batch_axis``) shards over the data axes;
-    heads/state dims stay local so decode needs no collectives."""
+    heads/state dims stay local.  The paged pool reuses the same rule —
+    its block axis sits exactly where the slot axis does (axis 1 of every
+    paged ``(L, NB, bs, ...)`` leaf), so KV *blocks* spread over the data
+    axes; the tiny per-sequence ``block_tables`` replicate (every shard
+    needs the full table to resolve its gathers)."""
     sizes = _mesh_sizes(mesh)
     daxes = tuple(a for a in ("pod", "data") if a in sizes)
 
     def spec(key, leaf):
         nd = len(leaf.shape)
-        if nd == 0:
+        if nd == 0 or key == "block_tables":
             return P()
         ax = cache_batch_axis(key)
         s = [None] * nd

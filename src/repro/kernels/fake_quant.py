@@ -9,6 +9,14 @@ bitwidth policy — including a vectorized batch of ReLeQ environments.
 
 Grid: 2-D over (M/bm, N/bn) row-major tiles.  Tiles are (128, 128)-aligned
 by the ops.py wrapper (pad + slice) so VREG lanes stay full.
+
+Sharding contract: the kernel takes a per-tensor SMEM scale, so the SPMD
+question never reaches it.  The jnp path's per-output-COLUMN scale is the
+one that broadcasts against the weight — under fsdp that broadcast used to
+trigger involuntary full rematerializations of the stacked tensor.  The
+fix lives where the broadcast lowers: ``quant/qat._qdq`` computes the
+stacked scale explicitly and pins scale + QDQ output to the leaf's
+``dist/sharding.py`` rule-table spec whenever an ambient mesh is set.
 """
 from __future__ import annotations
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.qmm import qmm_pallas
 from repro.quant.wrpn import tensor_scale
 
@@ -66,6 +67,35 @@ def fake_quant(w: jax.Array, bits, scale=None) -> jax.Array:
     out = fake_quant_pallas(w2p, bits, scale, block=(bm, bn), interpret=interpret)
     out = out[:M, :N]
     return out.reshape(shape)
+
+
+def paged_attention(
+    q: jax.Array,             # (B, 1, H, hd) — one new token per sequence
+    k_pool: jax.Array,        # (NB, bs, KV, hd) — one layer's paged blocks
+    v_pool: jax.Array,        # (NB, bs, KV, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32 effective lengths
+) -> jax.Array:
+    """Decode attention over a paged KV pool -> (B, 1, H, hd).
+
+    Pallas path DMAs each live block once (no gather materialization);
+    ref path gathers pages then runs the identical decode_attention math.
+    """
+    B, _, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    mode = _mode()
+    work = B * block_tables.shape[1] * k_pool.shape[1] * H * hd
+    if mode == "ref" or (mode == "auto" and not _on_tpu()
+                         and work > _INTERPRET_ELEM_CAP):
+        out = kref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                       lengths)
+        return out.astype(q.dtype)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    out = paged_attention_pallas(
+        q.reshape(B, KV, G, hd), k_pool, v_pool, block_tables, lengths,
+        interpret=interpret)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
 def qmm(

@@ -25,6 +25,26 @@ def dequant_ref(packed: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     return codes.astype(jnp.float32) / n * scale
 
 
+def paged_attention_ref(
+    q: jax.Array,             # (B, 1, H, hd) — single new token per sequence
+    k_pool: jax.Array,        # (NB, bs, KV, hd) — one layer's paged KV blocks
+    v_pool: jax.Array,        # (NB, bs, KV, hd)
+    block_tables: jax.Array,  # (B, nb) int32 physical block ids
+    lengths: jax.Array,       # (B,) valid tokens per sequence
+) -> jax.Array:
+    """Gather each sequence's pages into a contiguous (B, nb*bs, KV, hd)
+    view, then run the exact :func:`models.common.decode_attention` math —
+    bitwise what the slot pool computes on its contiguous rows, which is
+    what pins paged-vs-slot token parity."""
+    from repro.models.common import decode_attention
+
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+    kg = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    vg = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    return decode_attention(q, kg, vg, lengths)
+
+
 def qmm_ref(
     x: jax.Array, packed: jax.Array, scale: jax.Array, bits: int
 ) -> jax.Array:

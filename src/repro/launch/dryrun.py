@@ -186,6 +186,97 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, serve_bits: int = 4,
     return rec
 
 
+def run_dp_collectives(arch: str = "glm4-9b", *, planes: int = 2,
+                       devices: int = 8, seq_len: int = 64,
+                       global_batch: int = 8,
+                       out_dir: str | None = None) -> dict:
+    """Wire-byte report for the compressed data-parallel gradient path.
+
+    Compiles ``train_step.make_dp_train_step`` twice on a ``devices``-wide
+    data mesh — fp8-plane compressed all-reduce (error feedback carried in
+    the train state) vs the exact fp32 pmean — and reports the *measured*
+    gradient-collective payload bytes from each optimized HLO
+    (``hlo_analysis``: trip-count-corrected).  Smoke-sized model: the
+    ratio is what matters and it is size-invariant (planes + 4/n vs 4
+    bytes per gradient element).
+    """
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data import SyntheticLMData
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.quant.qat import bits_assignment, policy_for
+    from repro.train.train_step import init_dp_state, make_dp_train_step
+
+    prev_profile = os.environ.get("REPRO_SHARD_PROFILE")
+    os.environ["REPRO_SHARD_PROFILE"] = "dp"
+    try:
+        mesh = jax.make_mesh((devices,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        opt = AdamW(lr=1e-3)
+        bm = {k: jnp.asarray(v) for k, v in bits_assignment(
+            model.quant_groups(), policy_for(model, 8)).items()}
+        n_grad = sum(l.size for l in jax.tree.leaves(model.init(
+            jax.random.PRNGKey(0))))
+
+        wire = {}
+        with jax.set_mesh(mesh):
+            state = init_dp_state(model, opt, jax.random.PRNGKey(0), mesh)
+            data = SyntheticLMData(seed=0, global_batch=global_batch,
+                                   seq_len=seq_len, vocab=cfg.vocab_size)
+            batch = {k: jnp.asarray(v) for k, v in data.next().items()}
+            # send-bytes per device from the measured per-kind payloads: a
+            # ring all-reduce sends 2(n-1)/n x its payload, all-gather/
+            # all-to-all send (n-1)/n x their (output) payload
+            frac = (devices - 1) / devices
+            send_mult = {"all-reduce": 2 * frac, "all-gather": frac,
+                         "all-to-all": frac, "reduce-scatter": frac,
+                         "collective-permute": 1.0}
+            for name, p in (("compressed", planes), ("exact", 0)):
+                step = make_dp_train_step(model, opt, mesh, planes=p,
+                                          donate=False)
+                compiled = jax.jit(step).lower(state, batch, bm).compile()
+                costs = analyze_hlo(compiled.as_text())
+                wire[name] = {
+                    "payload_bytes": round(costs.coll_bytes),
+                    "send_bytes": round(sum(
+                        send_mult.get(k, 1.0) * v
+                        for k, v in costs.coll_bytes_by_kind.items())),
+                    "by_kind": {k: round(v) for k, v in
+                                costs.coll_bytes_by_kind.items()},
+                }
+    finally:
+        if prev_profile is None:
+            os.environ.pop("REPRO_SHARD_PROFILE", None)
+        else:
+            os.environ["REPRO_SHARD_PROFILE"] = prev_profile
+    red = (wire["exact"]["send_bytes"]
+           / max(wire["compressed"]["send_bytes"], 1.0))
+    rec = {
+        "benchmark": "dp_collectives", "arch": cfg.name, "devices": devices,
+        "planes": planes, "grad_elements": n_grad,
+        "wire": wire, "send_reduction_x": round(red, 3),
+        "analytic_send_bytes_per_elem": {
+            "exact": 8.0 * frac,
+            "compressed": 2.0 * planes * frac,
+        },
+    }
+    _log(f"[dp-collectives] {cfg.name} x{devices}dev planes={planes}: "
+         f"exact send={wire['exact']['send_bytes']/1e6:.1f}MB "
+         f"compressed send={wire['compressed']['send_bytes']/1e6:.1f}MB "
+         f"-> {red:.2f}x wire reduction")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"dp_collectives_{arch}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
 def run_all(meshes=("pod", "multipod"), out_dir=RESULTS_DIR, archs=None,
             shapes=None, timeout: int = 3600, profile: str | None = None):
     """Spawn one subprocess per cell (isolates the 512-device client and
@@ -242,7 +333,15 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--profile", default=None, choices=[None, "tp", "tp_sp", "fsdp"])
     ap.add_argument("--tag", default="")
+    ap.add_argument("--dp-collectives", action="store_true",
+                    help="measure compressed-vs-exact DP gradient wire "
+                         "bytes (PR-2 follow-up) instead of a cell compile")
+    ap.add_argument("--planes", type=int, default=2)
     args = ap.parse_args()
+    if args.dp_collectives:
+        run_dp_collectives(args.arch or "glm4-9b", planes=args.planes,
+                           out_dir=args.out or RESULTS_DIR)
+        return
     if args.all:
         run_all(out_dir=args.out or RESULTS_DIR, profile=args.profile)
         return

@@ -5,7 +5,10 @@ params, packs them at a ReLeQ policy, and serves a synthetic workload:
 
 - ``--mode continuous`` (default): staggered-arrival requests with
   heterogeneous output lengths, admitted mid-decode — reports tokens/s,
-  per-request TTFT and slot occupancy.
+  per-request TTFT, row occupancy and (paged) preemptions + block
+  occupancy.  ``--cache paged`` (default) uses the block-granular pool
+  with chunked prefill; ``--cache slot`` keeps the legacy slot pool for
+  one release as the parity baseline.
 - ``--mode static``: the legacy one-shot fixed-batch greedy loop (kept
   as the parity/latency baseline).
 """
@@ -68,7 +71,10 @@ def _static(args, cfg, model, sparams, policy):
 def _continuous(args, cfg, model, sparams, policy):
     max_len = args.prompt_len + args.gen + 1
     engine = ServeEngine(model, sparams, num_slots=args.num_slots,
-                         max_len=max_len)
+                         max_len=max_len, cache=args.cache,
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(1)
     gens = [int(g) for g in
             rng.integers(max(1, args.gen // 2), args.gen + 1, args.requests)]
@@ -85,10 +91,13 @@ def _continuous(args, cfg, model, sparams, policy):
             submitted += 1
         engine.step()
     m = engine.metrics()
-    print(f"served {args.requests} requests on {args.num_slots} slots "
-          f"(avg policy {policy.average_bits():.1f} bits)")
+    print(f"served {args.requests} requests on {args.num_slots} "
+          f"{args.cache} rows (avg policy {policy.average_bits():.1f} bits)")
     print(f"tokens/s={m['tokens_per_s']:.1f} occupancy={m['mean_occupancy']:.2f} "
-          f"decode_steps={m['decode_steps']} tokens={m['tokens_total']}")
+          f"decode_steps={m['decode_steps']} tokens={m['tokens_total']}"
+          + (f" preemptions={m['preemptions']} "
+             f"block_occ={m['mean_block_occupancy']:.2f}"
+             if args.cache == "paged" else ""))
     for r in m["requests"]:
         print(f"  req {r['id']}: {r['new_tokens']} tokens, "
               f"ttft={r['ttft_steps']} steps / {r['ttft_s'] * 1e3:.0f} ms, "
@@ -108,7 +117,19 @@ def main():
     ap.add_argument("--batch", type=int, default=4,
                     help="static mode: fixed batch size")
     ap.add_argument("--num-slots", type=int, default=4,
-                    help="continuous mode: KV-cache pool slots")
+                    help="continuous mode: max concurrent sequences")
+    ap.add_argument("--cache", choices=("paged", "slot"), default="paged",
+                    help="paged: block-granular pool + chunked prefill "
+                         "(one executable for any prompt mix); slot: "
+                         "legacy slot pool, kept one release for parity")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged cache: tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged cache: physical KV blocks (default: full "
+                         "slot-equivalent capacity; less oversubscribes "
+                         "and may preempt)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="paged cache: fixed prefill chunk length")
     ap.add_argument("--requests", type=int, default=8,
                     help="continuous mode: synthetic workload size")
     ap.add_argument("--arrival-every", type=int, default=2,

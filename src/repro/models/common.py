@@ -35,19 +35,27 @@ def shard_profile() -> str:
                  between blocks (Megatron sequence parallelism).
     - ``fsdp`` : batch over (pod, data, model) — no activation TP; weights
                  fully sharded over all axes (ZeRO-3).
+    - ``dp``   : pure data parallelism under an *outer* ``shard_map``
+                 (train_step.make_dp_train_step): the model body runs on a
+                 per-shard local batch, so every in-model constraint must
+                 no-op — sharding constraints are illegal inside manual
+                 collectives, and the shard is the whole world anyway.
     """
     return os.environ.get("REPRO_SHARD_PROFILE", "tp")
 
 
 def batch_axes():
     """Axes the global batch shards over."""
-    axes = ("pod", "data", "model") if shard_profile() == "fsdp" else ("pod", "data")
+    prof = shard_profile()
+    if prof == "dp":
+        return None
+    axes = ("pod", "data", "model") if prof == "fsdp" else ("pod", "data")
     axes = tuple(a for a in axes if a in _mesh_axes())
     return axes if axes else None
 
 
 def model_axis():
-    if shard_profile() == "fsdp":
+    if shard_profile() in ("fsdp", "dp"):
         return None
     return "model" if "model" in _mesh_axes() else None
 
@@ -64,6 +72,8 @@ def readout_axes():
     (the vocab dim owns it in every profile — a vocab matmul whose tokens
     are also model-sharded would otherwise compute full (D, V) f32 grad
     partials on every chip; EXPERIMENTS.md §Perf)."""
+    if shard_profile() == "dp":
+        return None
     axes = tuple(a for a in ("pod", "data") if a in _mesh_axes())
     return axes if axes else None
 
@@ -97,6 +107,8 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
                 pick = sub[0] if len(sub) == 1 else tuple(sub)
                 break
         clean.append(pick)
+    if all(pick is None for pick in clean):  # fully replicated: no-op (and
+        return x                             # legal inside shard_map bodies)
     return jax.lax.with_sharding_constraint(x, P(*clean))
 
 
@@ -130,7 +142,13 @@ def chunked_ce(readout_fn, h: jax.Array, labels: jax.Array,
         hc, lc, vc = inp
         logits = readout_fn(hc)
         logz = jax.scipy.special.logsumexp(logits, axis=-1)
-        tgt = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        # label pick as a masked reduce, NOT take_along_axis: a gather over
+        # the vocab-sharded dim makes GSPMD all-gather the full (B, c, V)
+        # f32 logits (a 5 GB/device temp at the glm4 fsdp train_4k cell);
+        # the compare+sum keeps the vocab dim sharded end to end
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        tgt = jnp.sum(jnp.where(vid == lc[..., None], logits, 0.0), axis=-1)
         nll_sum = nll_sum + jnp.sum((logz - tgt) * vc)
         z2_sum = z2_sum + jnp.sum(jnp.square(logz) * vc)
         return (nll_sum, z2_sum), None
@@ -389,6 +407,51 @@ def blocked_attention(
     out = _flash(qb, kb, vb, S, causal, window, cq, ck)
     out = out.reshape(B, Sq, KV * G, hd)[:, :S]
     return out.astype(q.dtype)
+
+
+def chunk_attention(
+    q: jax.Array,        # (B, C, H, hd) — one fixed-shape prompt chunk
+    k_ctx: jax.Array,    # (B, T, KV, hd) — already-cached context
+    v_ctx: jax.Array,    # (B, T, KV, hd)
+    ctx_pos: jax.Array,  # (B, T) absolute token index per context slot, -1 = empty
+    k_new: jax.Array,    # (B, C, KV, hd) — this chunk's keys (pre-write)
+    v_new: jax.Array,    # (B, C, KV, hd)
+    q_pos: jax.Array,    # (B, C) absolute token index per query (garbage tail ok)
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention: queries attend [context cache ; own chunk].
+
+    The chunk's keys are taken from ``k_new`` rather than the cache so a
+    ring-layout (sliding-window) cache is never read at slots the chunk is
+    about to overwrite.  Masking is purely in absolute token positions, so
+    the same code covers linear caches (slot t holds token t), ring caches
+    (slot s holds the youngest token ≡ s mod T), and paged gathers.  fp32
+    masked softmax — same arithmetic as :func:`decode_attention`.
+    """
+    B, C, H, hd = q.shape
+    KV = k_new.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qf = q.reshape(B, C, KV, G, hd).astype(jnp.float32)
+
+    def scores(k):
+        return jnp.einsum("bckgh,btkh->bkgct", qf,
+                          k.astype(jnp.float32)) * scale
+
+    def mask(key_pos):  # (B, Tk) -> (B, 1, 1, C, Tk)
+        ok = (key_pos[:, None, :] >= 0) & (key_pos[:, None, :] <= q_pos[:, :, None])
+        if window is not None:
+            ok &= q_pos[:, :, None] - key_pos[:, None, :] < window
+        return ok[:, None, None]
+
+    s = jnp.concatenate(
+        [jnp.where(mask(ctx_pos), scores(k_ctx), _NEG),
+         jnp.where(mask(q_pos), scores(k_new), _NEG)], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    v = jnp.concatenate([v_ctx, v_new], axis=1).astype(jnp.float32)
+    o = jnp.einsum("bkgct,btkh->bckgh", p, v)
+    return o.reshape(B, C, H, hd).astype(q.dtype)
 
 
 def decode_attention(

@@ -58,14 +58,28 @@ def _ssm_features(xc, p):
     return dt, Bm, Cm
 
 
-def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64, return_state: bool = False):
-    """x: (B, S, D) (already normalized).  Returns (y (B,S,D), state|None)."""
+def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64,
+                  return_state: bool = False, init_state: dict | None = None,
+                  valid=None):
+    """x: (B, S, D) (already normalized).  Returns (y (B,S,D), state|None).
+
+    ``init_state`` ({"h", "conv"}, as returned here) continues a cached
+    sequence — chunked prefill feeds each chunk the previous chunk's state.
+    ``valid`` (traced scalar) masks the Δ of positions ≥ valid to zero so a
+    fixed-shape chunk's garbage tail neither decays nor drives the state,
+    and the returned conv state ends at the last *valid* token.
+    """
     B, S, D = x.shape
     xb = apply_linear(x, p["in_x"])          # (B,S,Di)
     z = apply_linear(x, p["in_z"])
-    xc, _ = _causal_conv(xb, p["conv"])
+    conv0 = init_state["conv"] if init_state is not None else None
+    xc, _ = _causal_conv(xb, p["conv"], init_state=conv0)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
     dt, Bm, Cm = _ssm_features(xc, p)
+    if valid is not None:
+        # Δ = 0 at padding: decay exp(0·A) = 1 and input term 0 — the state
+        # passes through the garbage tail untouched
+        dt = dt * (jnp.arange(S) < valid)[None, :, None]
     A = -jnp.exp(p["A_log"])                 # (Di,N), negative
     Di, N = A.shape
 
@@ -101,7 +115,8 @@ def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64, return_state: bool 
         y = jnp.einsum("bcdn,bcn->bcd", h, Cc)
         return h[:, -1], y
 
-    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    h0 = (init_state["h"].astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B, Di, N), jnp.float32))
     h_last, ys = jax.lax.scan(chunk_step, h0, (xs, dts, Bs, Cs))
     y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, Di)[:, :S]
     y = y + p["D_skip"] * xc.astype(jnp.float32)
@@ -109,9 +124,17 @@ def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64, return_state: bool 
     out = apply_linear(y, p["out"])
     if return_state:
         ks = p["conv"].shape[0]
-        conv_state = xb[:, -(ks - 1):]
-        if S < ks - 1:
-            conv_state = jnp.pad(xb, ((0, 0), (ks - 1 - S, 0), (0, 0)))
+        if valid is not None or init_state is not None:
+            # last ks-1 inputs of [carried conv state ; valid prefix]
+            prev = (conv0.astype(xb.dtype) if conv0 is not None
+                    else jnp.zeros((B, ks - 1, Di), xb.dtype))
+            xpad = jnp.concatenate([prev, xb], axis=1)
+            end = valid if valid is not None else S
+            conv_state = jax.lax.dynamic_slice_in_dim(xpad, end, ks - 1, axis=1)
+        else:
+            conv_state = xb[:, -(ks - 1):]
+            if S < ks - 1:
+                conv_state = jnp.pad(xb, ((0, 0), (ks - 1 - S, 0), (0, 0)))
         return out, {"h": h_last, "conv": conv_state}
     return out, None
 

@@ -170,8 +170,13 @@ class RWKV6LM:
         lw = tm["w0"] + jnp.tanh(xw.astype(jnp.float32) @ tm["wa"]) @ tm["wb"]
         return -jnp.exp(jnp.clip(lw, -8.0, 6.0))  # log-decay in (-e^6, 0)
 
-    def _time_mix(self, x, xprev, p, state0=None):
-        """x: (B,S,D); xprev: previous-token x (B,S,D).  Returns (out, state)."""
+    def _time_mix(self, x, xprev, p, state0=None, valid=None):
+        """x: (B,S,D); xprev: previous-token x (B,S,D).  Returns (out, state).
+
+        ``valid`` (traced scalar) masks positions ≥ valid out of the wkv
+        state update (k → 0, log-decay → 0), so a fixed-shape prefill
+        chunk's garbage tail leaves the carried state exactly as if the
+        chunk had ended at ``valid``."""
         cfg, H, hd = self.cfg, self.H, self.cfg.hd
         B, S, D = x.shape
         tm = p["tm"]
@@ -181,6 +186,10 @@ class RWKV6LM:
         v = apply_linear(lerp(tm["mu_v"]), tm["wv"]).reshape(B, S, H, hd)
         g = jax.nn.silu(apply_linear(lerp(tm["mu_g"]), tm["wg"]).astype(jnp.float32))
         logw = self._decay(lerp(tm["mu_w"]), tm).reshape(B, S, H, hd)
+        if valid is not None:
+            keep = (jnp.arange(S) < valid)[None, :, None, None]
+            k = jnp.where(keep, k, jnp.zeros_like(k))
+            logw = jnp.where(keep, logw, jnp.zeros_like(logw))
         if state0 is None:
             state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
         if S == 1:
@@ -325,6 +334,48 @@ class RWKV6LM:
             "x_cm": xcms.astype(jnp.dtype(cfg.dtype)),
             "length": jnp.full((B,), S, jnp.int32),
         }
+        return logits, cache
+
+    def prefill_chunk(self, params, cache, tokens, seq, start, valid):
+        """One fixed-shape prompt chunk into pooled-cache row ``seq``.
+
+        The wkv/token-shift state is O(1) per sequence, so "paged" RWKV is
+        plain slot semantics: each chunk continues row ``seq``'s carried
+        state (padding masked out of the update — see ``_time_mix``) and
+        writes it back.  Same one-executable contract as the transformer
+        path.  Returns (logits (1, 1, V) f32 for the last valid token,
+        cache).
+        """
+        cfg = self.cfg
+        cache = dict(cache)
+        h = jnp.take(_embed_table(params), tokens, axis=0)   # (1, C, D)
+        # first chunk (start == 0): zero the carried state — a fresh
+        # admission may be reusing a row whose previous occupant's state
+        # is still cached.  Later chunks carry the cached state through.
+        continuing = start > 0
+        for l in range(cfg.num_layers):
+            p = self._layer_slice(params, l)
+            h1 = rms_norm(h, p["ln1"], cfg.norm_eps)
+            xtm0 = jnp.where(continuing, cache["x_tm"][l, seq],
+                             0).astype(cache["x_tm"].dtype)[None]
+            wkv0 = jnp.where(continuing, cache["wkv"][l, seq], 0.0)[None]
+            tm_out, st = self._time_mix(
+                h1, self._shift(h1, xtm0), p, state0=wkv0, valid=valid)
+            h = h + constrain(tm_out, batch_axes(), seq_axis(), None)
+            h2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+            xcm0 = jnp.where(continuing, cache["x_cm"][l, seq],
+                             0).astype(cache["x_cm"].dtype)[None]
+            cm_out = self._channel_mix(h2, self._shift(h2, xcm0), p)
+            h = h + constrain(cm_out, batch_axes(), seq_axis(), None)
+            cache["wkv"] = cache["wkv"].at[l, seq].set(st[0])
+            cache["x_tm"] = cache["x_tm"].at[l, seq].set(
+                h1[0, valid - 1][None].astype(cache["x_tm"].dtype))
+            cache["x_cm"] = cache["x_cm"].at[l, seq].set(
+                h2[0, valid - 1][None].astype(cache["x_cm"].dtype))
+        hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        last = jax.lax.dynamic_slice_in_dim(hn, valid - 1, 1, axis=1)
+        logits = apply_linear(last, params["lm_head"]).astype(jnp.float32)
+        cache["length"] = cache["length"].at[seq].set(start + valid)
         return logits, cache
 
     # ------------------------------------------------------------ quant API

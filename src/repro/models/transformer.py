@@ -37,6 +37,7 @@ from repro.models.common import (
     apply_rope,
     batch_axes,
     blocked_attention,
+    chunk_attention,
     constrain,
     decode_attention,
     dense_init,
@@ -145,6 +146,22 @@ class TransformerLM:
             out = blocked_attention(
                 q, k, v, causal=True, window=window,
                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        elif "block_tables" in cache:
+            # paged pool: write the new kv into the owning block, attend by
+            # block table (kernels.ops.paged_attention — Pallas on TPU,
+            # gather + the identical decode_attention math on CPU)
+            kc, vc, length = cache["k"][layer], cache["v"][layer], cache["length"]
+            bt = cache["block_tables"]                     # (B, nb)
+            bs = kc.shape[1]
+            Tc = bt.shape[1] * bs                          # tokens per sequence
+            slot = (length % Tc) if window is not None else jnp.minimum(length, Tc - 1)
+            phys = jnp.take_along_axis(bt, (slot // bs)[:, None], axis=1)[:, 0]
+            kc = kc.at[phys, slot % bs].set(k[:, 0])
+            vc = vc.at[phys, slot % bs].set(v[:, 0])
+            eff_len = jnp.minimum(length + 1, Tc)
+            out = kops.paged_attention(q, kc, vc, bt, eff_len)
+            cache["k"] = cache["k"].at[layer].set(kc)
+            cache["v"] = cache["v"].at[layer].set(vc)
         else:
             # write new kv into this layer's cache slot, attend over the cache
             kc, vc, length = cache["k"][layer], cache["v"][layer], cache["length"]
@@ -412,6 +429,119 @@ class TransformerLM:
             cache["ssm_conv"] = jnp.stack([s["conv"] for s in ssm_list])
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         logits = self._readout(params, h[:, -1:])
+        return logits, cache
+
+    # ----------------------------------------------------- chunked prefill
+    def _chunk_attn(self, x, p, positions, pos_in, cache, layer, seq,
+                    start, valid):
+        """Chunk attention sublayer against the paged pool: queries attend
+        [this sequence's cached pages ; the chunk itself], then the chunk's
+        kv is scattered into the owning blocks (padding lanes dropped)."""
+        cfg = self.cfg
+        window = cfg.sliding_window
+        B, C, D = x.shape
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = apply_linear(h, p["attn"]["wq"]).reshape(B, C, H, hd)
+        k = apply_linear(h, p["attn"]["wk"]).reshape(B, C, KV, hd)
+        v = apply_linear(h, p["attn"]["wv"]).reshape(B, C, KV, hd)
+        if cfg.rope == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        elif cfg.rope == "mrope":
+            q = apply_mrope(q, pos_in, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, pos_in, cfg.rope_theta, cfg.mrope_sections)
+
+        kc, vc = cache["k"][layer], cache["v"][layer]   # (NB, bs, KV, hd)
+        bt_row = cache["block_tables"][seq]             # (nb,)
+        bs = kc.shape[1]
+        nb = bt_row.shape[0]
+        Tc = nb * bs                                    # tokens per sequence
+        k_ctx = kc[bt_row].reshape(1, Tc, KV, hd)
+        v_ctx = vc[bt_row].reshape(1, Tc, KV, hd)
+        s_idx = jnp.arange(Tc, dtype=jnp.int32)
+        if window is None:
+            ctx_pos = jnp.where(s_idx < start, s_idx, -1)
+        else:
+            # ring: slot s holds the youngest token p ≡ s (mod Tc), p < start
+            p_tok = start - 1 - ((start - 1 - s_idx) % Tc)
+            ctx_pos = jnp.where(p_tok >= 0, p_tok, -1)
+        out = chunk_attention(q, k_ctx, v_ctx, ctx_pos[None], k, v,
+                              positions, window=window)
+
+        i_idx = jnp.arange(C, dtype=jnp.int32)
+        logical = positions[0]
+        if window is not None:
+            logical = logical % Tc
+        blk = jnp.take(bt_row, jnp.clip(logical // bs, 0, nb - 1))
+        phys = jnp.where(i_idx < valid, blk, kc.shape[0])  # OOB -> dropped
+        kc = kc.at[phys, logical % bs].set(k[0].astype(kc.dtype), mode="drop")
+        vc = vc.at[phys, logical % bs].set(v[0].astype(vc.dtype), mode="drop")
+        cache["k"] = cache["k"].at[layer].set(kc)
+        cache["v"] = cache["v"].at[layer].set(vc)
+
+        out = out.reshape(B, C, H * hd)
+        out = apply_linear(out, p["attn"]["wo"])
+        return x + constrain(out, batch_axes(), seq_axis(), None)
+
+    def _chunk_ssm(self, x, p, cache, layer, seq, start, valid):
+        """Hybrid SSM branch over a chunk, carrying this sequence's cached
+        state; padding tokens are masked out of the state update.  The
+        first chunk (start == 0) zeros the carried state — a freshly
+        admitted sequence may be reusing a row whose previous occupant's
+        final state is still in the cache."""
+        h = rms_norm(x, p["ln1"], self.cfg.norm_eps)
+        continuing = start > 0
+        state = {"h": jnp.where(continuing, cache["ssm_h"][layer, seq],
+                                0.0)[None],
+                 "conv": jnp.where(continuing, cache["ssm_conv"][layer, seq],
+                                   0).astype(cache["ssm_conv"].dtype)[None]}
+        y, st = mamba_mod.mamba_forward(
+            h, p["ssm"], chunk=self.cfg.chunk_size, return_state=True,
+            init_state=state, valid=valid)
+        cache["ssm_h"] = cache["ssm_h"].at[layer, seq].set(st["h"][0])
+        cache["ssm_conv"] = cache["ssm_conv"].at[layer, seq].set(
+            st["conv"][0].astype(cache["ssm_conv"].dtype))
+        return y
+
+    def prefill_chunk(self, params, cache, tokens, seq, start, valid):
+        """One fixed-shape prompt chunk into pooled-cache row ``seq``.
+
+        ``tokens``: (1, C) int32, garbage past ``valid``; ``start`` tokens
+        of this sequence are already cached.  ``seq``/``start``/``valid``
+        enter as data, so ONE executable serves every (prompt length ×
+        chunk index) combination — the compile-churn fix chunked prefill
+        exists for.  Returns (logits (1, 1, V) f32 for the last *valid*
+        token — the only row an admission ever reads — and the cache).
+        """
+        cfg = self.cfg
+        cache = dict(cache)
+        C = tokens.shape[1]
+        h = self._embed_in(params, tokens, None)
+        positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]
+        pos_in = (jnp.broadcast_to(positions[None], (3, 1, C))
+                  if cfg.rope == "mrope" else positions)
+        if cfg.rope == "abs_sin":
+            h = h + self._abs_sin(positions, cfg.d_model).astype(h.dtype)
+        for l in range(cfg.num_layers):
+            p = self._layer_slice(params, l)
+            if cfg.family == "hybrid":
+                a = self._chunk_attn(h, p, positions, pos_in, cache, l, seq,
+                                     start, valid) - h
+                s = self._chunk_ssm(h, p, cache, l, seq, start, valid)
+                mix = jax.nn.sigmoid(p["mix"]).astype(h.dtype)
+                h = h + mix * a + (1.0 - mix) * s
+            else:
+                h = self._chunk_attn(h, p, positions, pos_in, cache, l, seq,
+                                     start, valid)
+            h, _ = self._ffn(h, p, exact=True)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        # only the last valid token's logits are ever consumed: slice the
+        # hidden state BEFORE the d_model x V readout (a C-wide vocab
+        # matmul per chunk otherwise, discarded for all but the last chunk)
+        last = jax.lax.dynamic_slice_in_dim(h, valid - 1, 1, axis=1)
+        logits = self._readout(params, last)
+        cache["length"] = cache["length"].at[seq].set(start + valid)
         return logits, cache
 
     # ------------------------------------------------------------ quant API

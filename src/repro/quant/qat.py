@@ -13,8 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.quant.policy import QuantPolicy
-from repro.quant.wrpn import FP_BITS, fake_quant_ste
+from repro.quant.wrpn import FP_BITS, _fq_ste, tensor_scale
 
 
 def path_key(path: tuple) -> str:
@@ -68,31 +70,57 @@ def _paths_index(groups):
     return {path_key(g.path): g.path for g in groups}
 
 
-def _qdq(leaf: jax.Array, bits: jax.Array) -> jax.Array:
-    """STE fake-quant with the right vmap nesting for this leaf's rank.
+def _qdq(leaf: jax.Array, bits: jax.Array, spec=None) -> jax.Array:
+    """STE fake-quant at per-output-column scale (reduce dim ``ndim - 2``
+    of every leaf: the matrix contraction dim, under any stacking of
+    layer/expert axes) — exactly the codes the bitplane serving path
+    packs, so there is no train/serve gap.
 
-    Scales are per output column (axis=0 of each 2-D matrix) — exactly the
-    codes the bitplane serving path packs, so there is no train/serve gap.
+    ``spec`` (the leaf's PartitionSpec under the ambient mesh) anchors the
+    scale's and output's sharding.  Without it, GSPMD propagates a
+    conflicting layout onto the (..., 1, N) scale and re-broadcasting it
+    against the weight triggers an *involuntary full rematerialization* of
+    the whole stacked tensor — the 22.9 GB/device fsdp failure mode the
+    dryrun log pointed at wrpn.py (scale div/mul + the STE backward's
+    ``|w| <= scale`` compare).
     """
-    fq = lambda w, b: fake_quant_ste(w, b, axis=0)
-    if bits.ndim == 0:
-        if leaf.ndim == 3:  # unstacked expert bank (E, D, F): per-expert scale
-            return jax.vmap(lambda w: fq(w, bits))(leaf)
-        return fq(leaf, bits)
-    # stacked (L, ...) with per-layer bits
-    if leaf.ndim == 4:  # (L, E, D, F) expert bank: per-(layer, expert) scale
-        return jax.vmap(lambda w, b: jax.vmap(lambda we: fq(we, b))(w))(leaf, bits)
-    return jax.vmap(fq)(leaf, bits)
+    ax = leaf.ndim - 2 if leaf.ndim >= 2 else 0
+    scale = jax.lax.stop_gradient(tensor_scale(leaf, axis=ax))
+    bits = jnp.asarray(bits, jnp.int32)
+    bits = bits.reshape(bits.shape + (1,) * (leaf.ndim - bits.ndim))
+    if spec is None:
+        return _fq_ste(leaf, bits, scale)
+    entries = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+    scale = jax.lax.with_sharding_constraint(
+        scale, P(*(None if i == ax else e for i, e in enumerate(entries))))
+    return jax.lax.with_sharding_constraint(
+        _fq_ste(leaf, bits, scale), P(*entries))
 
 
 def quantize_params(params, bits_map: dict[str, jax.Array], groups):
-    """Return params with every group's leaf QDQ'd at its bitwidth."""
+    """Return params with every group's leaf QDQ'd at its bitwidth.
+
+    Under an ambient mesh (``jax.set_mesh``) each leaf's QDQ is annotated
+    with its ``dist/sharding.py`` rule-table spec — see ``_qdq``."""
+    from repro.compat import ambient_mesh
+    from repro.models.common import shard_profile
+
     idx = _paths_index(groups)
+    mesh = ambient_mesh()
+    # dp profile: the step body runs inside shard_map (manual axes), where
+    # sharding constraints are illegal — and pointless, params replicate
+    use_mesh = (mesh is not None and not mesh.empty
+                and shard_profile() != "dp")
     new = params
     for key, bits in bits_map.items():
         path = idx[key]
         leaf = get_by_path(params, path)
-        new = set_by_path(new, path, _qdq(leaf, jnp.asarray(bits)))
+        spec = None
+        if use_mesh:
+            from repro.dist.sharding import leaf_spec
+
+            spec = leaf_spec([str(p) for p in path], leaf.shape, mesh)
+        new = set_by_path(new, path, _qdq(leaf, jnp.asarray(bits), spec))
     return new
 
 

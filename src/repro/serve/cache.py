@@ -1,27 +1,42 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""KV-cache pools for continuous batching: paged (block-granular) + slot.
 
-One preallocated decode cache of ``num_slots`` sequences (the model's own
-``init_cache`` layout: per-layer state ``(L, B, ...)``, bookkeeping
-``(B,)`` — see ``models.model.cache_batch_axis``).  Sequences of different
-lengths share it: admission *splices* a batch-1 prefill cache into a free
-slot, and a finished sequence frees its slot immediately so the next
-queued request can take it on the very next engine step.
+``PagedCachePool`` is the production pool: transformer K/V lives as
+fixed-size *blocks* in one ``(L, num_blocks, block_size, KV, hd)`` pool and
+each sequence owns an ordered block table into it, so a 6-token sequence
+holds one block while its neighbor holds thirty — instead of every
+sequence owning a ``max_len``-sized slot.  Admission is gated on *free
+blocks*, capacity grows block-by-block as a sequence decodes, and block
+exhaustion is an allocation failure the scheduler turns into
+preempt-and-requeue (never a crash).  State that is O(1) per sequence
+(Mamba ``ssm_*``, RWKV ``wkv``/token-shift, ``length``) keeps slot
+semantics behind the same interface — ``models.model.cache_batch_axis``
+names the per-sequence axis of each leaf, exactly as for the slot pool.
 
-The pool is the alloc/free bookkeeping plus the cache pytree; it never
-calls the model.  Invariants (enforced, tested in test_serve_engine.py):
+Physical block 0 is a reserved garbage sink: empty batch rows point their
+block tables at it, so the fixed-shape decode step can scatter "writes"
+for inactive rows without touching any live sequence's blocks.
 
-- ``alloc`` returns each slot at most once until it is freed; raises
-  ``RuntimeError`` when the pool is exhausted,
-- ``free`` of a non-allocated slot raises ``ValueError``,
-- ``write`` only accepts a cache whose non-batch dims match the pool's
-  (same layers / cache length / head layout).
+``SlotCachePool`` is the legacy slot-granular pool (one ``max_len`` row
+per sequence, admission splices a batch-1 prefill cache in).  Kept for one
+release behind ``--cache slot`` as the parity baseline; the paged engine
+is pinned token-for-token against it in ``tests/test_serve_paged.py``.
+
+Allocator invariants (both pools, hypothesis-tested):
+- an id is returned at most once until freed; double-free raises,
+- ``ensure`` never over-allocates and reports exhaustion as ``False``,
+- freeing returns every block; pools drain back to their initial state.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.model import cache_batch_axis
+
+PAGED_KEYS = ("k", "v")  # transformer KV pages; everything else is O(1)/seq
 
 
 def _splice(pool_cache: dict, single_cache: dict, slot) -> dict:
@@ -40,6 +55,8 @@ _splice_jit = jax.jit(_splice, donate_argnums=(0,))
 
 
 class SlotCachePool:
+    """Legacy slot-granular pool: one max_len-sized cache row per sequence."""
+
     def __init__(self, model, num_slots: int, max_len: int, dtype=None,
                  mesh=None):
         if num_slots < 1:
@@ -74,6 +91,10 @@ class SlotCachePool:
     def occupancy(self) -> float:
         return len(self._active) / self.num_slots
 
+    def can_admit(self, n_tokens: int, reserve_blocks: int = 0) -> bool:
+        """Slot granularity: any free slot fits any (length-bounded) seq."""
+        return bool(self._free)
+
     def alloc(self) -> int:
         if not self._free:
             raise RuntimeError(f"all {self.num_slots} slots in use")
@@ -81,12 +102,20 @@ class SlotCachePool:
         self._active.add(slot)
         return slot
 
+    alloc_seq = alloc
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Slots are pre-sized to max_len: capacity is always there."""
+        return True
+
     def free(self, slot: int) -> None:
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not allocated")
         self._active.remove(slot)
         self._free.append(slot)
         self._free.sort(reverse=True)  # keep pop() -> lowest id deterministic
+
+    free_seq = free
 
     # ------------------------------------------------------------- cache ops
     def write(self, slot: int, single_cache: dict) -> None:
@@ -104,3 +133,196 @@ class SlotCachePool:
                     f"cache[{key!r}] shape {tuple(single_cache[key].shape)} "
                     f"!= {want}")
         self.cache = _splice_jit(self.cache, single_cache, slot)
+
+    def step_cache(self) -> dict:
+        return dict(self.cache)
+
+    def accept(self, cache: dict) -> None:
+        self.cache = cache
+
+    def cache_bytes(self) -> int:
+        """KV-leaf bytes (what the paged pool's equal-bytes claim compares)."""
+        return sum(self.cache[k].size * self.cache[k].dtype.itemsize
+                   for k in PAGED_KEYS if k in self.cache)
+
+
+class PagedCachePool:
+    """Block-granular KV pool + per-sequence block tables.
+
+    ``num_seqs``  max concurrently-running sequences (decode batch rows).
+    ``max_len``   per-sequence token capacity bound (same meaning as the
+                  slot pool's); sliding-window archs cap it at the window.
+    ``block_size`` tokens per KV block.  For ring (windowed) caches the
+                  block size is shrunk to the largest divisor of the ring
+                  length so ring arithmetic stays exact.
+    ``num_blocks`` physical blocks *including* the reserved garbage block
+                  0.  Default allocates full slot-pool capacity
+                  (num_seqs × blocks_per_seq + 1); pass less to
+                  oversubscribe — that is the point of paging.
+    """
+
+    def __init__(self, model, num_seqs: int, max_len: int, *,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 dtype=None, mesh=None):
+        if num_seqs < 1:
+            raise ValueError("num_seqs must be >= 1")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_seqs = self.num_slots = num_seqs  # num_slots: engine compat
+        self.max_len = max_len
+        self.mesh = mesh
+        template = model.init_cache(num_seqs, max_len, dtype)
+        self.paged_keys = tuple(k for k in PAGED_KEYS if k in template)
+        self._ring = (getattr(model.cfg, "sliding_window", None) is not None
+                      and bool(self.paged_keys))
+        if self.paged_keys:
+            T = template[self.paged_keys[0]].shape[2]  # (L, B, T, KV, hd)
+            if self._ring:
+                # ring arithmetic needs blocks_per_seq · bs == ring length
+                bs = min(block_size, T)
+                while T % bs:
+                    bs -= 1
+                self.block_size = bs
+            else:
+                self.block_size = min(block_size, T)
+            self.blocks_per_seq = -(-T // self.block_size)
+        else:  # O(1)-state family: pure slot semantics, no blocks at all
+            self.block_size = block_size
+            self.blocks_per_seq = 0
+        usable = (num_blocks - 1 if num_blocks is not None
+                  else num_seqs * self.blocks_per_seq)
+        if self.blocks_per_seq and usable < self.blocks_per_seq:
+            raise ValueError(
+                f"num_blocks={num_blocks} leaves {usable} usable blocks < "
+                f"{self.blocks_per_seq} needed for a single full sequence")
+        self.num_blocks = usable + 1  # + reserved garbage block 0
+        if mesh is not None and self.paged_keys:
+            # pad the pool to a multiple of the data-axis device count so
+            # cache_specs' divisibility guard shards the block axis instead
+            # of silently replicating (extra blocks just grow the free list)
+            d = math.prod(s for n, s in zip(mesh.axis_names, mesh.axis_sizes)
+                          if n in ("pod", "data"))
+            self.num_blocks = -(-self.num_blocks // d) * d
+
+        self.cache = {}
+        for key, leaf in template.items():
+            if key in self.paged_keys:
+                L, _, _, KV, hd = leaf.shape
+                self.cache[key] = jnp.zeros(
+                    (L, self.num_blocks, self.block_size, KV, hd), leaf.dtype)
+            else:
+                self.cache[key] = leaf
+        if mesh is not None:
+            # same dist hook as the slot pool: the *block* axis (axis 1 of
+            # every paged leaf — cache_batch_axis's slot position) shards
+            # over the mesh's data axes; block tables stay replicated
+            from repro.dist import sharding as shd
+
+            self.cache = jax.device_put(
+                self.cache, shd.to_named(shd.cache_specs(self.cache, mesh),
+                                         mesh))
+
+        self.block_tables = np.zeros((num_seqs, max(self.blocks_per_seq, 1)),
+                                     np.int32)
+        self._free_seqs = list(range(num_seqs - 1, -1, -1))  # pop -> lowest
+        self._active: set[int] = set()
+        self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+        self._seq_blocks: dict[int, list[int]] = {}
+
+    # ----------------------------------------------------------- bookkeeping
+    @property
+    def num_free(self) -> int:
+        return len(self._free_seqs)
+
+    @property
+    def num_free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def active_slots(self) -> frozenset:
+        return frozenset(self._active)
+
+    def occupancy(self) -> float:
+        return len(self._active) / self.num_seqs
+
+    def block_occupancy(self) -> float:
+        usable = self.num_blocks - 1
+        return 1.0 - len(self._free_blocks) / usable if usable else 0.0
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        if not self.blocks_per_seq:
+            return 0
+        n = min(n_tokens, self.blocks_per_seq * self.block_size)
+        return -(-n // self.block_size)
+
+    def can_admit(self, n_tokens: int, reserve_blocks: int = 0) -> bool:
+        """Admissible iff a row is free and the free list covers the whole
+        prompt PLUS ``reserve_blocks`` of headroom (the scheduler passes
+        one block per running sequence — a vLLM-style watermark so a fresh
+        admission isn't immediately preempted by its neighbors' growth and
+        its chunked prefill burned)."""
+        if not self._free_seqs:
+            return False
+        if not self.blocks_per_seq:
+            # O(1)-state family: no blocks exist, nothing to reserve — a
+            # free row is the whole admission decision
+            return True
+        return (len(self._free_blocks)
+                >= self.blocks_needed(n_tokens) + reserve_blocks)
+
+    def alloc_seq(self) -> int:
+        if not self._free_seqs:
+            raise RuntimeError(f"all {self.num_seqs} sequences in use")
+        seq = self._free_seqs.pop()
+        self._active.add(seq)
+        self._seq_blocks[seq] = []
+        return seq
+
+    def ensure(self, seq: int, n_tokens: int) -> bool:
+        """Grow ``seq`` to cover ``n_tokens`` (clamped to its capacity).
+
+        Returns False — allocating *nothing* — when the free list cannot
+        cover the growth; the scheduler answers with preemption.
+        """
+        if seq not in self._active:
+            raise ValueError(f"seq {seq} is not allocated")
+        have = self._seq_blocks[seq]
+        need = self.blocks_needed(n_tokens) - len(have)
+        if need <= 0:
+            return True
+        if need > len(self._free_blocks):
+            return False
+        for _ in range(need):
+            blk = self._free_blocks.pop()
+            self.block_tables[seq, len(have)] = blk
+            have.append(blk)
+        return True
+
+    def free_seq(self, seq: int) -> None:
+        if seq not in self._active:
+            raise ValueError(f"seq {seq} is not allocated")
+        self._active.remove(seq)
+        self._free_blocks.extend(self._seq_blocks.pop(seq))
+        self._free_blocks.sort(reverse=True)  # pop() -> lowest id
+        self.block_tables[seq] = 0            # back to the garbage sink
+        self._free_seqs.append(seq)
+        self._free_seqs.sort(reverse=True)
+
+    # ------------------------------------------------------------- cache ops
+    def step_cache(self) -> dict:
+        """Device view for one prefill-chunk/decode call: pool leaves plus
+        the current block tables (data — shape never changes)."""
+        d = dict(self.cache)
+        d["block_tables"] = jnp.asarray(self.block_tables)
+        return d
+
+    def accept(self, cache: dict) -> None:
+        """Take back the (donated-and-returned) cache from a jit call."""
+        cache = dict(cache)
+        cache.pop("block_tables", None)  # host copy is authoritative
+        self.cache = cache
+
+    def cache_bytes(self) -> int:
+        """Paged-leaf bytes (the number "equal cache bytes" compares)."""
+        return sum(self.cache[k].size * self.cache[k].dtype.itemsize
+                   for k in self.paged_keys)

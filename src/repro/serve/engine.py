@@ -1,20 +1,35 @@
 """ServeEngine: the top-level continuous-batching serve loop.
 
 ``submit()`` enqueues a request; ``step()`` runs one engine iteration
-(admit -> prefill new sequences into slots -> one packed decode step over
-every running slot); ``run_until_drained()`` steps until queue and slots
-are empty.  Weights stay bit-packed (``quant.pack``) at a ReLeQ
+(admit -> prefill new sequences -> one packed decode step over every
+running row); ``run_until_drained()`` steps until queue and rows are
+empty.  Weights stay bit-packed (``quant.pack``) at a ReLeQ
 ``QuantPolicy`` for the whole lifetime of the engine — quantization cost
 is paid once at construction, not per request.
+
+Two cache backends (``cache=`` / ``launch/serve.py --cache``):
+
+- ``"paged"`` (default): block-granular ``PagedCachePool``.  Admission
+  runs *fixed-shape chunked prefill* directly into the sequence's blocks
+  — any mix of prompt lengths compiles exactly ONE prefill executable and
+  ONE decode executable (the slot path compiles a prefill per distinct
+  prompt length).  Before each decode the scheduler reserves one token of
+  growth per running sequence; block exhaustion preempts-and-requeues the
+  youngest sequence, whose re-admission replays prompt + emitted tokens
+  (deterministic greedy decode ⇒ the client-visible stream is unchanged).
+- ``"slot"``: the legacy slot pool (full-prompt prefill + splice), kept
+  one release as the parity baseline.
 
 Numerics: the decode step is row-independent (per-sequence attention/SSM
 state, drop-free MoE routing in decode), so a request's tokens are
 bit-identical whether it shares the batch with 0 or ``num_slots - 1``
-other sequences — the property the single-request-parity test pins down.
+other sequences — and the paged decode gathers each sequence's pages into
+exactly the contiguous rows the slot pool stores, which is what pins
+paged-vs-slot token parity (tests/test_serve_paged.py).
 
-Metrics: per-request TTFT (seconds *and* engine steps), wall latency and
-token counts, plus aggregate tokens/s and mean slot occupancy over decode
-steps (the utilization number static batching wastes).
+Metrics: per-request TTFT (seconds *and* engine steps), wall latency,
+token counts and preemptions, plus aggregate tokens/s, mean row occupancy
+and (paged) mean block occupancy over decode steps.
 """
 from __future__ import annotations
 
@@ -24,22 +39,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.quant.policy import QuantPolicy
-from repro.serve.cache import SlotCachePool
+from repro.serve.cache import PagedCachePool, SlotCachePool
 from repro.serve.queue import AdmissionQueue
 from repro.serve.request import Request, SamplingParams
 from repro.serve.scheduler import ContinuousScheduler
-from repro.train.serve import make_decode_step, make_prefill
+from repro.train.serve import (
+    make_chunked_prefill,
+    make_decode_step,
+    make_prefill,
+)
 
 
 class ServeEngine:
     def __init__(self, model, sparams, *, num_slots: int = 8,
-                 max_len: int = 256, max_pending: int = 0,
+                 max_len: int = 256, cache: str = "paged",
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefill_chunk: int = 16, max_pending: int = 0,
                  decode_fn=None, prefill_fn=None, mesh=None):
+        if cache not in ("paged", "slot"):
+            raise ValueError(f"cache={cache!r} (want 'paged' or 'slot')")
         self.model = model
         self.sparams = sparams
-        # mesh != None places the KV slot pool over the mesh's data axes
+        self.cache_kind = cache
+        # mesh != None places the KV pool over the mesh's data axes
         # (repro.dist sharding hook) — decode updates stay shard-local
-        self.pool = SlotCachePool(model, num_slots, max_len, mesh=mesh)
+        if cache == "paged":
+            self.pool = PagedCachePool(model, num_slots, max_len,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks, mesh=mesh)
+            self._prefill = prefill_fn or make_chunked_prefill(model)
+            self.prefill_chunk = prefill_chunk
+        else:
+            self.pool = SlotCachePool(model, num_slots, max_len, mesh=mesh)
+            self._prefill = prefill_fn or make_prefill(model)
         self.queue = AdmissionQueue(max_pending)
         self.scheduler = ContinuousScheduler(self.pool, self.queue)
         # decode_fn/prefill_fn let callers share one jit cache across
@@ -47,7 +79,6 @@ class ServeEngine:
         # default decode donates the pool cache — step() immediately
         # replaces it, so XLA updates the KV buffers in place
         self._decode = decode_fn or make_decode_step(model, donate=True)
-        self._prefill = prefill_fn or make_prefill(model)
         # attention caches without a sliding window hold exactly max_len
         # tokens; SSM/windowed state is O(1)/O(window) so any length fits
         self._length_bound = (
@@ -58,6 +89,7 @@ class ServeEngine:
         self._tokens_total = 0
         self._decode_steps = 0
         self._occupancy_sum = 0.0
+        self._block_occupancy_sum = 0.0
         self._run_seconds = 0.0
         self.requests: dict[int, Request] = {}
 
@@ -96,37 +128,76 @@ class ServeEngine:
     def num_running(self) -> int:
         return self.scheduler.num_running
 
+    # ------------------------------------------------------------- prefill
+    def _admit_slot(self, req: Request, slot: int):
+        """Legacy path: full-prompt prefill at its exact length + splice."""
+        logits, cache1 = self._prefill(
+            self.sparams, jnp.asarray(req.prompt)[None, :], self.pool.max_len)
+        self.pool.write(slot, cache1)
+        return req.select_token(np.asarray(logits)[0, -1]), len(req.prompt), True
+
+    def _admit_paged(self, req: Request, seq: int):
+        """Chunked prefill straight into the sequence's blocks.  Every
+        chunk call has the same shapes — one executable total.  On resume
+        after preemption the prompt + emitted tokens are replayed (exact
+        recompute) and no new token is emitted."""
+        replay = req.replay_tokens()
+        C = self.prefill_chunk
+        logits, valid = None, 0
+        for lo in range(0, len(replay), C):
+            piece = replay[lo:lo + C]
+            valid = len(piece)
+            buf = np.zeros((1, C), np.int32)
+            buf[0, :valid] = piece
+            logits, cache = self._prefill(
+                self.sparams, self.pool.step_cache(), jnp.asarray(buf),
+                seq, lo, valid)
+            self.pool.accept(cache)
+        if req.output_tokens:  # resume: last emitted token is the next feed
+            return req.output_tokens[-1], len(replay), False
+        return req.select_token(np.asarray(logits)[0, 0]), len(replay), True
+
     # ----------------------------------------------------------------- loop
     def step(self) -> dict:
         """One engine iteration.  Returns the step's events:
-        ``{"admitted": [ids], "tokens": [(id, tok)], "finished": [ids]}``.
+        ``{"admitted": [ids], "tokens": [(id, tok)], "finished": [ids],
+        "preempted": [ids]}``.
         """
         t0 = time.perf_counter()
-        events = {"admitted": [], "tokens": [], "finished": []}
+        events = {"admitted": [], "tokens": [], "finished": [],
+                  "preempted": []}
 
-        # 1) admit queued requests into free slots (mid-decode is fine:
-        #    running slots are untouched, their cache rows never move)
+        # 1) admit queued requests into free rows (mid-decode is fine:
+        #    running sequences are untouched, their blocks never move)
         for req, slot in self.scheduler.admissions():
-            logits, cache1 = self._prefill(
-                self.sparams, jnp.asarray(req.prompt)[None, :],
-                self.pool.max_len)
-            self.pool.write(slot, cache1)
-            tok = req.select_token(np.asarray(logits)[0, -1])
-            self._emit(req, tok, events)
+            if self.cache_kind == "paged":
+                tok, cached, emitted = self._admit_paged(req, slot)
+            else:
+                tok, cached, emitted = self._admit_slot(req, slot)
+            if emitted:
+                self._emit(req, tok, events)
             events["admitted"].append(req.request_id)
-            self.scheduler.start(req, slot, tok)
-            if req.done:  # 1-token budget (or instant EOS): slot back now
+            self.scheduler.start(req, slot, tok, cached_len=cached)
+            if req.done:  # 1-token budget (or instant EOS): row back now
                 self._finish(self.scheduler.finish(slot), events)
 
-        # 2) one packed decode step over every running slot
+        # 2) reserve next-token blocks; exhaustion preempts youngest
+        if self.cache_kind == "paged":
+            for req in self.scheduler.reserve_for_decode():
+                events["preempted"].append(req.request_id)
+
+        # 3) one packed decode step over every running row
         if self.scheduler.running:
             self._occupancy_sum += self.pool.occupancy()
+            if self.cache_kind == "paged":
+                self._block_occupancy_sum += self.pool.block_occupancy()
             self._decode_steps += 1
             toks = np.zeros((self.pool.num_slots, 1), np.int32)
             for slot, seq in self.scheduler.running.items():
                 toks[slot, 0] = seq.last_token
-            logits, self.pool.cache = self._decode(
-                self.sparams, self.pool.cache, jnp.asarray(toks))
+            logits, cache = self._decode(
+                self.sparams, self.pool.step_cache(), jnp.asarray(toks))
+            self.pool.accept(cache)
             rows = np.asarray(logits[:, -1])  # (num_slots, V)
             for slot, seq in list(self.scheduler.running.items()):
                 tok = seq.request.select_token(rows[slot])
@@ -170,6 +241,7 @@ class ServeEngine:
                 "state": req.state.value,
                 "prompt_len": int(req.prompt.size),
                 "new_tokens": len(req.output_tokens),
+                "preemptions": req.preemptions,
                 "ttft_s": req.ttft(),
                 "ttft_steps": (None if req.first_token_step is None
                                else req.first_token_step - req.arrival_step),
@@ -178,7 +250,7 @@ class ServeEngine:
             })
         occ = (self._occupancy_sum / self._decode_steps
                if self._decode_steps else 0.0)
-        return {
+        out = {
             "steps": self._step_idx,
             "decode_steps": self._decode_steps,
             "tokens_total": self._tokens_total,
@@ -186,8 +258,17 @@ class ServeEngine:
                              if self._run_seconds > 0 else 0.0),
             "mean_occupancy": occ,
             "num_slots": self.pool.num_slots,
+            "cache": self.cache_kind,
+            "preemptions": self.scheduler.preemptions,
             "requests": per_request,
         }
+        if self.cache_kind == "paged":
+            out["mean_block_occupancy"] = (
+                self._block_occupancy_sum / self._decode_steps
+                if self._decode_steps else 0.0)
+            out["block_size"] = self.pool.block_size
+            out["num_blocks"] = self.pool.num_blocks
+        return out
 
     def output(self, request_id: int) -> list[int]:
         return list(self.requests[request_id].output_tokens)

@@ -24,6 +24,11 @@ class AdmissionQueue:
                 f"admission queue full ({self.max_pending} pending)")
         self._q.append(request)
 
+    def push_front(self, request: Request) -> None:
+        """Requeue at the head (preempted sequences re-admit first; no
+        backpressure check — the request was already admitted once)."""
+        self._q.appendleft(request)
+
     def pop(self) -> Request:
         return self._q.popleft()
 

@@ -29,6 +29,7 @@ class RequestState(enum.Enum):
 class SamplingParams:
     temperature: float = 0.0   # 0 -> greedy argmax
     top_k: int = 0             # 0 -> full distribution
+    top_p: float = 1.0         # nucleus: smallest prefix with mass >= top_p
     seed: int = 0              # per-request sampling stream
 
 
@@ -48,6 +49,7 @@ class Request:
     # engine-step metrics (deterministic; tests key on these)
     arrival_step: int | None = None
     first_token_step: int | None = None
+    preemptions: int = 0       # times evicted-and-requeued (paged engine)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -68,6 +70,21 @@ class Request:
     def total_len(self) -> int:
         """Tokens the slot must hold: prompt + full decode budget."""
         return int(self.prompt.size) + self.max_new_tokens
+
+    def cache_tokens_needed(self) -> int:
+        """Cache tokens admission must cover now: the (replayed) prefix
+        plus the first decode write.  Grows with emitted tokens so a
+        preempted request re-admits with room for its whole replay."""
+        return int(self.prompt.size) + max(len(self.output_tokens), 1)
+
+    def replay_tokens(self) -> np.ndarray:
+        """Tokens to prefill on (re-)admission: the prompt, plus — after a
+        preemption — every emitted token except the last, which becomes
+        the next decode input (exactly the pre-preemption state)."""
+        if not self.output_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.output_tokens[:-1], np.int32)])
 
     def ttft(self) -> float | None:
         if self.first_token_time is None:
@@ -91,4 +108,14 @@ def select_token(logits: np.ndarray, sampling: SamplingParams,
     z = z - z.max()
     p = np.exp(z)
     p /= p.sum()
+    if sampling.top_p < 1.0:
+        # nucleus: keep the smallest probability-sorted prefix whose mass
+        # reaches top_p (the top token always survives), renormalize
+        order = np.argsort(-p, kind="stable")
+        csum = np.cumsum(p[order])
+        cut = int(np.searchsorted(csum, sampling.top_p) + 1)
+        mask = np.zeros_like(p, bool)
+        mask[order[:cut]] = True
+        p = np.where(mask, p, 0.0)
+        p /= p.sum()
     return int(rng.choice(p.size, p=p))

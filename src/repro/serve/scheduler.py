@@ -1,14 +1,22 @@
-"""Iteration-level scheduler: which sequence runs in which slot, when.
+"""Iteration-level scheduler: which sequence runs in which row, when.
 
 Continuous batching à la Orca/vLLM, specialized to ReLeQ serving: every
-engine step the scheduler (1) admits queued requests into free slots —
-*admissions happen mid-decode*, the running sequences never stop — and
-(2) reports the set of running sequences to pack into the next jit'd
-decode step.  Finished sequences release their slot in the same step, so
-a drained slot is refillable on the next iteration.
+engine step the scheduler (1) admits queued requests — *mid-decode*, the
+running sequences never stop — gated on both a free sequence row AND
+enough free KV blocks for the whole prompt (paged pool; the slot pool
+degenerates to "any free slot"), and (2) reserves one token of cache
+growth per running sequence before the packed decode step.  When the
+block pool is exhausted, the reservation pass *preempts the youngest
+running sequence*: its blocks return to the pool, the request goes back
+to the FRONT of the admission queue, and re-admission recomputes its
+cache from prompt + already-emitted tokens (recompute-style preemption —
+greedy decode is deterministic, so the replayed state is exact and the
+client-visible token stream is unaffected).  Oldest-first reservation
+plus a pool sized for ≥ 1 full sequence guarantees progress: the oldest
+sequence can always grow.
 
-The scheduler owns the bookkeeping (queue, slot pool, running table) and
-makes no model calls — the engine turns its decisions into prefill/decode
+The scheduler owns the bookkeeping (queue, pool, running table) and makes
+no model calls — the engine turns its decisions into prefill/decode
 launches.  Keeping the policy host-side means the device-side decode step
 stays a single fixed-shape executable regardless of traffic.
 """
@@ -16,25 +24,29 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.serve.cache import SlotCachePool
 from repro.serve.queue import AdmissionQueue
 from repro.serve.request import Request, RequestState
 
 
 @dataclass
 class RunningSeq:
-    """One admitted sequence: its request and the token to feed next."""
+    """One admitted sequence: its request, next token to feed, and how
+    many tokens its cache currently holds (drives block reservation)."""
 
     request: Request
     slot: int
     last_token: int
+    cached_len: int = 0
+    order: int = 0        # admission counter — youngest = max(order)
 
 
 class ContinuousScheduler:
-    def __init__(self, pool: SlotCachePool, queue: AdmissionQueue):
+    def __init__(self, pool, queue: AdmissionQueue):
         self.pool = pool
         self.queue = queue
-        self.running: dict[int, RunningSeq] = {}  # slot -> sequence
+        self.running: dict[int, RunningSeq] = {}  # row -> sequence
+        self.preemptions = 0
+        self._order = 0
 
     # ------------------------------------------------------------------
     @property
@@ -45,24 +57,71 @@ class ContinuousScheduler:
         return bool(self.queue) or bool(self.running)
 
     def admissions(self) -> list[tuple[Request, int]]:
-        """Pop queued requests into free slots (FIFO, one slot each)."""
+        """Pop queued requests into free rows (FIFO, head-of-line blocking:
+        a big request never gets overtaken by a small one)."""
         admitted = []
-        while self.queue and self.pool.num_free:
-            req = self.queue.pop()
-            admitted.append((req, self.pool.alloc()))
+        while self.queue:
+            req = self.queue.peek()
+            # headroom watermark: one growth block per running (or just-
+            # admitted) sequence, so admitting never sets up an immediate
+            # preempt-replay cycle
+            if not self.pool.can_admit(
+                    req.cache_tokens_needed(),
+                    reserve_blocks=len(self.running) + len(admitted)):
+                break
+            self.queue.pop()
+            seq = self.pool.alloc_seq()
+            ok = self.pool.ensure(seq, req.cache_tokens_needed())
+            assert ok, "can_admit promised the blocks"
+            admitted.append((req, seq))
         return admitted
 
-    def start(self, request: Request, slot: int, first_token: int) -> None:
+    def start(self, request: Request, slot: int, first_token: int,
+              cached_len: int = 0) -> None:
         """Register a prefilled sequence as running."""
         request.state = RequestState.RUNNING
-        self.running[slot] = RunningSeq(request, slot, first_token)
+        self.running[slot] = RunningSeq(request, slot, first_token,
+                                        cached_len, self._order)
+        self._order += 1
 
     def advance(self, slot: int, token: int) -> None:
-        self.running[slot].last_token = token
+        seq = self.running[slot]
+        seq.last_token = token
+        seq.cached_len += 1
+
+    def reserve_for_decode(self) -> list[Request]:
+        """Grow every running sequence by one token's worth of blocks,
+        oldest first; preempt-and-requeue the youngest on exhaustion.
+        Returns the preempted requests (already requeued)."""
+        preempted: list[Request] = []
+        for slot in sorted(self.running, key=lambda s: self.running[s].order):
+            if slot not in self.running:  # already preempted this pass
+                continue
+            seq = self.running[slot]
+            while not self.pool.ensure(slot, seq.cached_len + 1):
+                victim = max(self.running,
+                             key=lambda s: self.running[s].order)
+                preempted.append(self.preempt(victim))
+                if victim == slot:
+                    break
+        return preempted
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a running sequence: blocks back to the pool, request back
+        to the queue head (it keeps its emitted tokens; re-admission
+        replays prompt + outputs to rebuild the cache)."""
+        seq = self.running.pop(slot)
+        self.pool.free_seq(slot)
+        req = seq.request
+        req.state = RequestState.QUEUED
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.push_front(req)
+        return req
 
     def finish(self, slot: int) -> Request:
-        """Retire a sequence and free its slot for the next admission."""
+        """Retire a sequence and free its row + blocks for the next one."""
         seq = self.running.pop(slot)
         seq.request.state = RequestState.FINISHED
-        self.pool.free(slot)
+        self.pool.free_seq(slot)
         return seq.request

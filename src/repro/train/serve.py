@@ -106,15 +106,31 @@ def make_decode_step(model, donate: bool = True):
 
 
 def make_prefill(model):
-    """jit'd prefill over serving-layout params.
+    """jit'd full-prompt prefill over serving-layout params (slot path).
 
     ``max_len`` is static (it sizes the KV cache); each distinct prompt
-    length compiles once — the serve engine admits prompts at their exact
-    length to keep token-for-token parity with the unbatched path (prompt
-    bucketing is a recorded follow-up in ROADMAP.md).
+    length compiles its own executable — the compile churn the paged
+    engine's chunked prefill (:func:`make_chunked_prefill`) eliminates.
+    Kept for ``--cache slot`` parity.
     """
 
     def pre(sparams, tokens, max_len):
         return model.prefill(sparams, tokens=tokens, max_len=max_len)
 
     return jax.jit(pre, static_argnums=(2,))
+
+
+def make_chunked_prefill(model, donate: bool = True):
+    """jit'd fixed-shape chunk prefill into a pooled cache (paged path).
+
+    ``step(sparams, cache, tokens (1, C), seq, start, valid)`` — C is
+    static (baked by the tokens shape); seq/start/valid are data.  Any mix
+    of prompt lengths therefore compiles exactly ONE executable (pinned by
+    ``tests/test_serve_paged.py`` via the jit cache-size counter).  The
+    pool cache is donated so chunk writes update the KV blocks in place.
+    """
+
+    def pre(sparams, cache, tokens, seq, start, valid):
+        return model.prefill_chunk(sparams, cache, tokens, seq, start, valid)
+
+    return jax.jit(pre, donate_argnums=(1,) if donate else ())

@@ -63,6 +63,50 @@ def test_qmm_dtypes(xdtype):
     assert rel < 3e-2
 
 
+@pytest.mark.parametrize("shape", [(3, 7, 4, 2, 1, 8),    # B,NB,bs,KV,G,hd
+                                   (2, 9, 8, 1, 4, 16),
+                                   (4, 5, 16, 2, 2, 16)])
+@pytest.mark.parametrize("kvdtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel(shape, kvdtype):
+    """Pallas paged decode attention (block-table index maps + online
+    softmax) vs the gather-then-decode_attention oracle."""
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    B, NB, bs, KV, G, hd = shape
+    nb = NB - 1  # logical blocks per sequence (block 0 = garbage sink)
+    q = jnp.asarray(RNG.normal(size=(B, 1, KV * G, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(NB, bs, KV, hd)), kvdtype)
+    v = jnp.asarray(RNG.normal(size=(NB, bs, KV, hd)), kvdtype)
+    # each sequence gets a distinct permutation of physical blocks
+    bt = jnp.stack([1 + (jnp.arange(nb) + b) % (NB - 1) for b in range(B)])
+    lengths = jnp.asarray([(7 * b + 3) % (nb * bs) + 1 for b in range(B)],
+                          jnp.int32)
+    want = kref.paged_attention_ref(q, k, v, bt, lengths)
+    got = paged_attention_pallas(q.reshape(B, KV, G, hd), k, v, bt, lengths,
+                                 interpret=True).reshape(B, 1, KV * G, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paged_attention_ops_dispatch():
+    from repro.kernels import ops
+
+    os.environ["REPRO_PALLAS"] = "interpret"
+    try:
+        B, NB, bs, KV, G, hd = 2, 5, 4, 2, 2, 8
+        q = jnp.asarray(RNG.normal(size=(B, 1, KV * G, hd)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(NB, bs, KV, hd)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(NB, bs, KV, hd)), jnp.float32)
+        bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+        lengths = jnp.asarray([5, 8], jnp.int32)
+        got = ops.paged_attention(q, k, v, bt, lengths)
+        want = kref.paged_attention_ref(q, k, v, bt, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+    finally:
+        os.environ["REPRO_PALLAS"] = "ref"
+
+
 def test_ops_wrapper_pads_and_dispatches():
     from repro.kernels import ops
 

@@ -23,7 +23,8 @@ def served():
     params = model.init(RNG)
     sparams = quantize_for_serving(model, params,
                                    policy_for(model, default_bits=4))
-    fns = {"prefill_fn": make_prefill(model),
+    fns = {"cache": "slot",  # legacy engine under test; paged: test_serve_paged.py
+           "prefill_fn": make_prefill(model),
            "decode_fn": make_decode_step(model, donate=False)}
     return cfg, model, sparams, fns
 
@@ -101,7 +102,7 @@ def test_single_request_parity_rwkv():
                                    policy_for(model, default_bits=4))
     prompt, gen = _prompt(cfg, 6), 4
     want = _static_loop(model, sparams, prompt, gen, max_len=16)
-    eng = ServeEngine(model, sparams, num_slots=2, max_len=16)
+    eng = ServeEngine(model, sparams, num_slots=2, max_len=16, cache="slot")
     rid = eng.submit(prompt, max_new_tokens=gen + 1)
     eng.run_until_drained()
     assert eng.output(rid) == want

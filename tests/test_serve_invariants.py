@@ -19,7 +19,8 @@ def served():
     model = build_model(cfg)
     sparams = quantize_for_serving(model, model.init(jax.random.PRNGKey(0)),
                                    policy_for(model, default_bits=4))
-    fns = {"prefill_fn": make_prefill(model),
+    fns = {"cache": "slot",  # legacy engine; paged invariants: test_serve_paged.py
+           "prefill_fn": make_prefill(model),
            "decode_fn": make_decode_step(model, donate=False)}
     return cfg, model, sparams, fns
 
