@@ -1,18 +1,29 @@
-"""ReLeQ on a language model: search per-matrix bitwidths for a reduced
-glm4-family decoder, driving the QAT train/eval steps as the environment.
+"""ReLeQ on a language model, served by the asynchronous autotune stack:
+search per-matrix bitwidths for a reduced glm4-family decoder with the
+QAT train/eval steps as the accuracy evaluator and the analytic TPU
+decode roofline as the hardware signal.
 
     PYTHONPATH=src python examples/releq_lm_search.py [--episodes 12]
 
-This is the scale-out configuration of DESIGN.md §4 running on one host:
-the environment evaluator = short QAT finetune + likelihood-ratio proxy;
-bitwidths enter the jit'd step as data so every candidate shares one
-executable.
+This drives ``repro.autotune.AutotuneService`` (the scale-out successor
+to the lockstep loop of DESIGN.md §4) on one host: episode rollouts are
+decoupled from the short-retrain evaluations, which run on a worker
+pool and complete out of order; every evaluated candidate lands in a
+Pareto archive over (rel-accuracy, SQ, latency).  ``--lockstep`` runs
+the faithful single-env ``ReLeQSearch`` loop instead for comparison —
+and ``python -m repro.launch.autotune --deploy`` takes the archive all
+the way into a live ServeEngine.
 """
 import argparse
 
 import jax
 import numpy as np
 
+from repro.autotune import (
+    AnalyticLatencyEvaluator,
+    AutotuneService,
+    ServiceConfig,
+)
 from repro.configs import get_config
 from repro.core.search import ReLeQSearch, make_lm_env_factory
 from repro.data import SyntheticLMData
@@ -27,6 +38,9 @@ def main():
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--episodes", type=int, default=12)
     ap.add_argument("--pretrain-steps", type=int, default=120)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="run the paper-faithful synchronous loop instead")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -44,11 +58,32 @@ def main():
         state, m = step(state, data.next(), bm)
     print(f"pretrain loss: {float(m['loss']):.3f}")
 
-    print("\n== ReLeQ search over per-matrix bitwidths ==")
     factory = make_lm_env_factory(model, state["params"], data,
                                   finetune_steps=2)
-    search = ReLeQSearch(factory, seed=0)
-    result = search.run(episodes=args.episodes, log_every=4)
+    if args.lockstep:
+        print("\n== lockstep ReLeQ search ==")
+        result = ReLeQSearch(factory, seed=0).run(
+            episodes=args.episodes, log_every=4)
+    else:
+        print(f"\n== async ReLeQ search ({args.workers} workers) ==")
+        service = AutotuneService(
+            factory,
+            latency_eval=AnalyticLatencyEvaluator(model.quant_groups(),
+                                                  model.frozen_bits()),
+            config=ServiceConfig(num_workers=args.workers,
+                                 batch_episodes=2, seed=0))
+        result = service.run(episodes=args.episodes, log_every=4)
+        service.shutdown()
+        s = result.service_stats
+        print(f"throughput {s['episodes_per_s']:.2f} episodes/s, "
+              f"{s['updates']} PPO updates, "
+              f"retrain cache hit-rate {result.cache_stats['hit_rate']:.2f}")
+        print(f"Pareto archive: {s['archive_size']} non-dominated policies")
+        for e in service.archive.entries():
+            print(f"  acc={e.acc:.3f} sq={e.sq:.3f} "
+                  f"lat={e.latency:.2e}s "
+                  f"avg_bits={np.mean([b for _, b in e.bits]):.2f}")
+
     bits = result.best_bits
     print(f"\nbest policy (avg {np.mean(list(bits.values())):.2f} bits):")
     for name, b in list(bits.items())[:12]:

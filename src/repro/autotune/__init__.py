@@ -1,0 +1,35 @@
+"""repro.autotune: asynchronous hardware-in-the-loop ReLeQ search service.
+
+The paper's RL search, run as a service against the production serving
+stack instead of a synchronous offline loop:
+
+- service.py   actor/learner orchestrator — PPO updates decoupled from
+               episode evaluation via an off-policy buffer with
+               staleness-bounded importance correction
+- workers.py   evaluator pool: short-QAT accuracy + hardware-in-the-loop
+               latency (real ServeEngine decode steps, compiled-HLO
+               roofline, or the analytic TPU model)
+- archive.py   persistent Pareto archive over (rel-acc, SQ, latency)
+               with dominance pruning, JSON checkpoints and warm-start
+- deploy.py    archive winner -> packed weights -> hot-swap into a live
+               ServeEngine with an A/B token-parity gate
+
+CLI: ``python -m repro.launch.autotune`` (search, archive, deploy).
+"""
+from repro.autotune.archive import ArchiveEntry, ParetoArchive, dominates  # noqa: F401
+from repro.autotune.deploy import (  # noqa: F401
+    ab_parity_check,
+    compile_policy,
+    deploy,
+    hot_swap,
+    policy_from_entry,
+)
+from repro.autotune.service import AutotuneService, ServiceConfig  # noqa: F401
+from repro.autotune.workers import (  # noqa: F401
+    AccuracyEvaluator,
+    AnalyticLatencyEvaluator,
+    EngineLatencyEvaluator,
+    EvalResult,
+    EvaluatorPool,
+    HLOLatencyEvaluator,
+)

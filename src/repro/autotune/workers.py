@@ -1,0 +1,284 @@
+"""Evaluation workers: the two evaluator kinds behind one interface.
+
+A candidate bitwidth policy is scored on up to two axes:
+
+- **accuracy** (`AccuracyEvaluator`): the existing short-QAT proxy — any
+  ``evaluate(bits_by_name) -> rel_acc`` callable (LM likelihood ratio,
+  CNN accuracy ratio, or a synthetic oracle).  Results memoize in a
+  shared :class:`~repro.core.evalcache.EvalCache`; evaluators that are
+  not thread-safe (they advance a data cursor, e.g. the QAT retrain) are
+  serialized behind a lock while distinct-candidate latency measurements
+  still overlap.
+- **latency** (hardware-in-the-loop): measured seconds per decode step
+  of the candidate policy:
+
+  * :class:`EngineLatencyEvaluator` packs the candidate's weights
+    (``quant.pack``) and times real ``ServeEngine`` decode steps — the
+    HAQ-style signal, on whatever accelerator is attached;
+  * :class:`HLOLatencyEvaluator` lowers + compiles the packed decode
+    step and rooflines the optimized HLO (``launch/hlo_analysis`` —
+    trip-count-corrected flops/bytes) when no accelerator is present;
+  * :class:`AnalyticLatencyEvaluator` is the free closed-form fallback
+    (``costmodel.tpu_decode_time``) for tests and benches.
+
+  Each reports ``ref_latency`` at the all-8-bit reference so the service
+  can fold the *ratio* into the reward alongside SQ.
+
+:class:`EvaluatorPool` fans candidates out to a thread pool and returns
+futures — the async service consumes them out of order.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+
+from repro.core import costmodel
+from repro.core.evalcache import EvalCache
+
+
+@dataclass(frozen=True)
+class EvalResult:
+    """One worker's verdict on a candidate policy."""
+
+    acc: float                      # relative accuracy in (0, ~1.2]
+    sq: float | None = None         # filled by the service (analytic)
+    latency: float | None = None    # s/decode-step at the candidate
+    ref_latency: float | None = None  # same measurement at all-8-bit
+    acc_cache_hit: bool = False
+    eval_seconds: float = 0.0
+
+    def latency_ratio(self) -> float | None:
+        """latency / 8-bit reference, in (0, 1] for any sub-8-bit policy."""
+        if self.latency is None or not self.ref_latency:
+            return None
+        return self.latency / self.ref_latency
+
+
+class AccuracyEvaluator:
+    """Short-QAT accuracy proxy behind the shared memo-cache.
+
+    ``thread_safe=False`` (default) serializes the underlying callable —
+    the QAT retrain advances a data cursor and shares jit buffers, so two
+    threads inside it would race.  Device-parallel evaluators (one pod
+    per worker, or a pure function) pass ``thread_safe=True``.
+    """
+
+    def __init__(self, fn, *, cache: EvalCache | None = None,
+                 thread_safe: bool = False):
+        self.fn = fn
+        self.cache = cache if cache is not None else EvalCache()
+        self._lock = None if thread_safe else threading.Lock()
+
+    def __call__(self, bits_by_name: dict) -> tuple[float, bool]:
+        def compute():
+            if self._lock is not None:
+                with self._lock:
+                    return float(self.fn(bits_by_name))
+            return float(self.fn(bits_by_name))
+
+        value, hit = self.cache.get_or_compute(bits_by_name, compute)
+        return float(value), hit
+
+
+class _LatencyBase:
+    """Shared cache + 8-bit reference plumbing for latency evaluators."""
+
+    def __init__(self, group_names, frozen=None):
+        self.group_names = tuple(group_names)
+        self.frozen = dict(frozen or {})
+        self.cache = EvalCache()
+        self._ref: float | None = None
+
+    def _measure(self, bits_by_name: dict) -> float:  # pragma: no cover
+        raise NotImplementedError
+
+    def __call__(self, bits_by_name: dict) -> tuple[float, float]:
+        """-> (latency, ref_latency) in seconds per decode step."""
+        if self._ref is None:
+            ref_bits = {n: self.frozen.get(n, 8) for n in self.group_names}
+            self._ref, _ = self.cache.get_or_compute(
+                ref_bits, lambda: self._measure(ref_bits))
+        lat, _ = self.cache.get_or_compute(
+            bits_by_name, lambda: self._measure(bits_by_name))
+        return float(lat), float(self._ref)
+
+
+class AnalyticLatencyEvaluator(_LatencyBase):
+    """Closed-form TPU decode roofline (``costmodel.tpu_decode_time``)."""
+
+    def __init__(self, groups, frozen=None, *, batch: int = 1):
+        super().__init__((g.name for g in groups), frozen)
+        self.groups = list(groups)
+        self.batch = batch
+
+    def _measure(self, bits_by_name: dict) -> float:
+        vec = [bits_by_name.get(g.name, 8) for g in self.groups]
+        return costmodel.tpu_decode_time(vec, self.groups, batch=self.batch)
+
+
+class HLOLatencyEvaluator(_LatencyBase):
+    """No-accelerator stand-in: compile the candidate's packed decode step
+    and roofline the optimized HLO (loop-corrected flops / HBM bytes per
+    ``launch/hlo_analysis``) against TPU-v5e peaks.  Structure-accurate —
+    it sees exactly the bitplane buffers ``quant.pack`` would serve — at
+    one XLA compile per distinct candidate (memoized)."""
+
+    def __init__(self, model, *, batch: int = 1, max_len: int = 32,
+                 peak=costmodel.V5E_PEAK_FLOPS, bw=costmodel.V5E_HBM_BW):
+        groups = model.quant_groups()
+        super().__init__((g.name for g in groups), model.frozen_bits())
+        self.model = model
+        self.batch = batch
+        self.max_len = max_len
+        self.peak, self.bw = peak, bw
+
+    def _measure(self, bits_by_name: dict) -> float:
+        import jax
+
+        from repro.launch.hlo_analysis import analyze_hlo
+        from repro.launch.specs import cache_struct, sds, serving_params_struct
+        from repro.quant.policy import QuantPolicy
+
+        policy = QuantPolicy.from_array(
+            self.group_names, [bits_by_name[n] for n in self.group_names])
+        sparams = serving_params_struct(self.model, policy)
+        cache = cache_struct(self.model, self.batch, self.max_len)
+        tokens = sds((self.batch, 1), "int32")
+        model = self.model
+
+        def step(sp, c, t):
+            return model.decode_step(sp, c, t)
+
+        compiled = jax.jit(step).lower(sparams, cache, tokens).compile()
+        costs = analyze_hlo(compiled.as_text())
+        return max(costs.flops / self.peak, costs.traffic_bytes / self.bw)
+
+
+class EngineLatencyEvaluator(_LatencyBase):
+    """Hardware-in-the-loop: pack the candidate policy and time real
+    ``ServeEngine`` decode steps with every row occupied.  The measured
+    wall time per engine step — prefill excluded, jit warmup excluded —
+    is the serving cost the reward sees.
+
+    Inside an :class:`EvaluatorPool` the timing runs under the pool's
+    measurement lock, so it never overlaps a serialized QAT retrain (or
+    another timing) on the shared device.  A ``thread_safe=True``
+    accuracy evaluator opts out of that lock — only pair it with this
+    evaluator when accuracy work runs on *different* devices, or the
+    memoized first measurement will bake in their contention."""
+
+    def __init__(self, model, params, *, num_slots: int = 2,
+                 prompt_len: int = 4, decode_steps: int = 8,
+                 warmup_steps: int = 2, cache: str = "paged",
+                 block_size: int = 8, prefill_chunk: int = 8,
+                 vocab: int | None = None, seed: int = 0):
+        groups = model.quant_groups()
+        super().__init__((g.name for g in groups), model.frozen_bits())
+        self.model, self.params = model, params
+        self.num_slots = num_slots
+        self.prompt_len = prompt_len
+        self.decode_steps = decode_steps
+        self.warmup_steps = warmup_steps
+        self.engine_kw = dict(cache=cache)
+        if cache == "paged":
+            self.engine_kw.update(block_size=block_size,
+                                  prefill_chunk=prefill_chunk)
+        self.vocab = vocab if vocab is not None else model.cfg.vocab_size
+        self.seed = seed
+
+    def _measure(self, bits_by_name: dict) -> float:
+        import numpy as np
+
+        from repro.quant.policy import QuantPolicy
+        from repro.serve import ServeEngine
+
+        policy = QuantPolicy.from_array(
+            self.group_names, [bits_by_name[n] for n in self.group_names])
+        gen = self.warmup_steps + self.decode_steps + 2
+        max_len = self.prompt_len + gen + 1
+        engine = ServeEngine.from_params(
+            self.model, self.params, policy, num_slots=self.num_slots,
+            max_len=max_len, **self.engine_kw)
+        rng = np.random.default_rng(self.seed)
+        for _ in range(self.num_slots):
+            engine.submit(rng.integers(0, self.vocab, self.prompt_len), gen)
+        while engine.num_running < self.num_slots:  # admit + prefill
+            engine.step()
+        for _ in range(self.warmup_steps):
+            engine.step()
+        t0 = time.perf_counter()
+        for _ in range(self.decode_steps):
+            engine.step()
+        return (time.perf_counter() - t0) / self.decode_steps
+
+
+class EvaluatorPool:
+    """Thread pool running (accuracy, latency) evaluations per candidate.
+
+    ``submit`` returns a :class:`Future` resolving to :class:`EvalResult`;
+    the service consumes completions out of order.  Accuracy results share
+    one :class:`EvalCache` (hit-rate surfaced via :meth:`stats`); latency
+    evaluators carry their own cache keyed on the same canonical tuple.
+    """
+
+    def __init__(self, accuracy: AccuracyEvaluator, latency=None, *,
+                 num_workers: int = 4):
+        self.accuracy = accuracy
+        self.latency = latency
+        self.num_workers = max(1, int(num_workers))
+        self._ex = ThreadPoolExecutor(
+            max_workers=self.num_workers,
+            thread_name_prefix="autotune-eval")
+        self._submitted = 0
+        self._completed = 0
+        self._lock = threading.Lock()
+        # wall-clock latency measurements must not overlap retrains (or
+        # each other) on a shared device — one pool-wide measurement
+        # lock serializes both, so a serialized accuracy evaluator and
+        # an EngineLatencyEvaluator timing never contend.  thread_safe
+        # accuracy evaluators (per-worker devices / pure oracles) opt
+        # out of the shared lock and keep running concurrently.
+        self._measure_lock = threading.Lock()
+        if accuracy._lock is not None:
+            accuracy._lock = self._measure_lock
+
+    def _evaluate(self, bits_by_name: dict) -> EvalResult:
+        t0 = time.perf_counter()
+        acc, hit = self.accuracy(bits_by_name)
+        lat = ref = None
+        if self.latency is not None:
+            with self._measure_lock:
+                lat, ref = self.latency(bits_by_name)
+        with self._lock:
+            self._completed += 1
+        return EvalResult(acc=acc, latency=lat, ref_latency=ref,
+                          acc_cache_hit=hit,
+                          eval_seconds=time.perf_counter() - t0)
+
+    def submit(self, bits_by_name: dict) -> Future:
+        with self._lock:
+            self._submitted += 1
+        return self._ex.submit(self._evaluate, dict(bits_by_name))
+
+    def stats(self) -> dict:
+        out = {
+            "workers": self.num_workers,
+            "submitted": self._submitted,
+            "completed": self._completed,
+            "acc_cache": self.accuracy.cache.stats(),
+        }
+        if self.latency is not None and hasattr(self.latency, "cache"):
+            out["latency_cache"] = self.latency.cache.stats()
+        return out
+
+    def shutdown(self) -> None:
+        self._ex.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

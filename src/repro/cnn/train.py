@@ -130,14 +130,35 @@ class CNNTask:
 
     def make_env_factory(self, *, retrain_steps: int = 4,
                          reward_mode: str = "proposed",
-                         bitset=(2, 3, 4, 5, 6, 7, 8)):
+                         bitset=(2, 3, 4, 5, 6, 7, 8),
+                         eval_mode: str = "per_step", cache=None):
+        """Env factory for ReLeQSearch / the async autotune service.
+
+        ``cache=None`` builds a fresh :class:`EvalCache`; pass one to share
+        retrain results across searches (warm-started runs).  The cache is
+        exposed as ``factory.eval_cache`` so the search record can report
+        its hit rate."""
+        from repro.core.evalcache import EvalCache
+
+        memo = cache if cache is not None else EvalCache()
+
+        def evaluate(bits: dict) -> float:
+            value, _ = memo.get_or_compute(
+                bits, lambda: self.evaluate_bits(bits, retrain_steps))
+            return value
+
         def factory(env_id: int) -> QuantEnv:
             return QuantEnv(
                 groups=self.groups,
-                evaluate=lambda bits: self.evaluate_bits(bits, retrain_steps),
+                evaluate=evaluate,
                 weight_std=self.weight_std(),
                 bitset=bitset,
                 frozen=self.frozen,
                 reward_mode=reward_mode,
+                eval_mode=eval_mode,
             )
+
+        factory.eval_cache = memo
+        factory.evaluate = evaluate
+        factory.compute = lambda bits: self.evaluate_bits(bits, retrain_steps)
         return factory

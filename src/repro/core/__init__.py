@@ -5,11 +5,15 @@
 - reward.py     asymmetric shaped reward + the two Fig 3 alternatives
 - agent.py      shared-LSTM actor-critic (policy 128-128-|A|, value 128-64-1)
 - ppo.py        PPO from scratch (clip 0.1, Adam 1e-4, GAE 0.99, 3 epochs)
-- search.py     episode driver (faithful 1-env mode + vectorized pod mode)
+- search.py     episode driver (faithful 1-env mode + vectorized pod mode;
+                the async scale-out path lives in repro.autotune.service)
+- evalcache.py  thread-safe evaluate() memo shared with autotune workers
 - costmodel.py  State-of-Quantization + Stripes / TVM-CPU / TPU-v5e models
-- pareto.py     design-space enumeration (Fig 6 validation)
+- pareto.py     design-space enumeration (Fig 6 validation; the persistent
+                multi-objective archive is repro.autotune.archive)
 - admm_baseline.py  the ADMM comparison policy (Table 4)
 """
 from repro.core.env import QuantEnv, STATE_DIM  # noqa: F401
+from repro.core.evalcache import EvalCache  # noqa: F401
 from repro.core.ppo import PPO, PPOConfig  # noqa: F401
 from repro.core.search import ReLeQSearch, SearchResult, make_lm_env_factory  # noqa: F401

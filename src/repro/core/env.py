@@ -15,6 +15,16 @@ The evaluator is an injected callable ``evaluate(bits_by_name) -> rel_acc``
 so the same environment drives the paper's CNNs (accuracy ratio) and the
 LM stack (likelihood ratio), locally or sharded over a pod.
 
+Evaluation modes (``eval_mode``):
+  per_step     evaluate after every action (paper's shallow-net mode)
+  episode_end  evaluate once, at the final action (deep nets)
+  deferred     never evaluate inside ``step`` — the episode's terminal
+               reward stays provisional (acc = the initial 1.0) until an
+               external evaluator reports back and the caller patches it
+               via :meth:`reward_for`.  This is the step-level API the
+               async ``repro.autotune`` service uses to roll out episodes
+               without blocking on the short retrain.
+
 State embedding (Table 1, both axes):
   layer-specific static : layer index (norm), log #weights (norm), weight std
   layer-specific dynamic: current bitwidth (norm)
@@ -45,6 +55,8 @@ class QuantEnv:
     init_bits: int = 8                # paper: all layers start at 8 bits
 
     def __post_init__(self):
+        if self.eval_mode not in ("per_step", "episode_end", "deferred"):
+            raise ValueError(f"eval_mode={self.eval_mode!r}")
         self.searchable = [g for g in self.groups if g.name not in self.frozen]
         self.T = len(self.searchable)
         self._logw = {g.name: np.log(max(g.n_weights, 1)) for g in self.groups}
@@ -83,7 +95,7 @@ class QuantEnv:
         self.bits[g.name] = int(self.bitset[action])
         self.quant_state = self._quant_state()
         done = self.t == self.T - 1
-        if self.eval_mode == "per_step" or done:
+        if self.eval_mode == "per_step" or (done and self.eval_mode == "episode_end"):
             self.acc_state = float(self.evaluate(dict(self.bits)))
         reward = self._reward(self.acc_state, self.quant_state,
                               **self.reward_kwargs)
@@ -91,3 +103,13 @@ class QuantEnv:
         info = {"bits": dict(self.bits), "acc": self.acc_state,
                 "quant": self.quant_state, "group": g.name}
         return self._obs(), float(reward), done, info
+
+    # ------------------------------------------------------------------
+    def reward_for(self, acc: float, quant: float) -> float:
+        """Step-level API: the episode reward for an externally supplied
+        (rel-accuracy, quant-state) pair, under this env's reward shaping.
+        The async service uses it to finalize a ``deferred`` episode once
+        its evaluation worker reports back — identical to what
+        ``episode_end`` would have computed in-line."""
+        return float(self._reward(float(acc), float(quant),
+                                  **self.reward_kwargs))

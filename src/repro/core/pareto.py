@@ -5,6 +5,13 @@ sweep every bitwidth combination, record (State_Quantization, rel-accuracy)
 per point, extract the Pareto frontier, and check where the ReLeQ solution
 lands — the paper's validation that the RL agent finds the "desired region"
 of the frontier.
+
+This module is the *small-network oracle* for the persistent archive in
+``repro.autotune.archive``: :func:`as_archive` lifts an enumerated space
+into a :class:`~repro.autotune.archive.ParetoArchive`, whose 2-objective
+frontier provably equals :func:`pareto_frontier` (pinned in
+tests/test_autotune.py) while adding dominance-pruned insertion, a third
+latency objective, JSON checkpointing and warm-start.
 """
 from __future__ import annotations
 
@@ -45,6 +52,13 @@ def pareto_frontier(points):
             frontier.append(p)
             best_acc = p["acc"]
     return frontier
+
+
+def as_archive(points, latency_fn=None):
+    """Enumerated points -> a ``repro.autotune`` Pareto archive (oracle)."""
+    from repro.autotune.archive import ParetoArchive
+
+    return ParetoArchive.from_enumeration(points, latency_fn=latency_fn)
 
 
 def distance_to_frontier(point, frontier) -> float:

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.agent import init_agent
 from repro.core.env import STATE_DIM, QuantEnv
+from repro.core.evalcache import EvalCache
 from repro.core.ppo import PPO, PPOConfig
 
 
@@ -29,18 +30,29 @@ class SearchResult:
     best_reward: float
     episodes: list = field(default_factory=list)   # per-episode records
     prob_evolution: list = field(default_factory=list)  # (episode, T, A)
+    cache_stats: dict = field(default_factory=dict)  # evaluate() memo hit-rate
+    service_stats: dict = field(default_factory=dict)  # async-run throughput
 
     def bits_vector(self, groups):
         return [self.best_bits[g.name] for g in groups]
 
     def average_bits(self, searchable_only=None) -> float:
-        names = searchable_only or list(self.best_bits)
+        """Mean bitwidth over ``searchable_only`` (None -> every group).
+
+        ``None`` and ``[]`` are distinct: None means "average everything",
+        while an explicit empty selection has no defined mean and raises
+        (it used to silently fall through to "all groups")."""
+        names = list(self.best_bits) if searchable_only is None \
+            else list(searchable_only)
+        if not names:
+            raise ValueError("average_bits over an empty group selection")
         return float(np.mean([self.best_bits[n] for n in names]))
 
 
 class ReLeQSearch:
     def __init__(self, make_env, *, num_envs: int = 1, seed: int = 0,
                  ppo_config: PPOConfig | None = None):
+        self.make_env = make_env
         self.envs = [make_env(i) for i in range(num_envs)]
         self.num_envs = num_envs
         num_actions = len(self.envs[0].bitset)
@@ -108,6 +120,9 @@ class ReLeQSearch:
                       f"acc={last['acc']:.3f} quant={last['quant']:.3f} "
                       f"avg_bits={np.mean(list(last['bits'].values())):.2f} "
                       f"pi_loss={metrics['pi_loss']:.4f}")
+        cache = getattr(self.make_env, "eval_cache", None)
+        if cache is not None:
+            result.cache_stats = cache.stats()
         return result
 
 
@@ -147,16 +162,14 @@ def make_lm_env_factory(model, params, data, *, finetune_steps: int = 4,
             leaf = leaf[g.layer]
         wstd[g.name] = float(jnp.std(leaf.astype(jnp.float32)))
 
-    memo: dict[tuple, float] = {}
+    # bit-vectors recur across episodes (the agent revisits policies, and
+    # early-episode prefixes repeat); the short retrain is the search's
+    # wall-clock bottleneck, so memoize on the canonical frozen bits tuple.
+    # EvalCache is lock-guarded and coalesces concurrent same-key calls,
+    # so the autotune worker pool can share it across threads.
+    memo = EvalCache()
 
-    def evaluate(bits_by_name: dict) -> float:
-        # bit-vectors recur across episodes (the agent revisits policies,
-        # and early-episode prefixes repeat); the short retrain is the
-        # search's wall-clock bottleneck, so memoize on the full vector
-        key = tuple(bits_by_name[g.name] for g in groups)
-        hit = memo.get(key)
-        if hit is not None:
-            return hit
+    def compute(bits_by_name: dict) -> float:
         pol = QuantPolicy.from_array(tuple(g.name for g in groups),
                                      [bits_by_name[g.name] for g in groups])
         bm = {k: jnp.asarray(v) for k, v in bits_assignment(groups, pol).items()}
@@ -168,12 +181,20 @@ def make_lm_env_factory(model, params, data, *, finetune_steps: int = 4,
         else:
             p_eval = params
         nll_q = float(np.mean([float(eval_step(p_eval, b, bm)) for b in eval_batch]))
-        memo[key] = float(np.exp(nll_fp - nll_q))
-        return memo[key]
+        return float(np.exp(nll_fp - nll_q))
+
+    def evaluate(bits_by_name: dict) -> float:
+        value, _ = memo.get_or_compute(bits_by_name,
+                                       lambda: compute(bits_by_name))
+        return value
 
     def factory(env_id: int) -> QuantEnv:
         return QuantEnv(groups=groups, evaluate=evaluate, weight_std=wstd,
                         bitset=bitset, frozen=frozen, reward_mode=reward_mode,
                         eval_mode=eval_mode)
 
+    factory.eval_cache = memo          # shared across searches/worker pools
+    factory.evaluate = evaluate        # cached step-level API
+    factory.compute = compute          # raw retrain (autotune workers layer
+    #                                    their own cache exactly once)
     return factory

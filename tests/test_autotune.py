@@ -1,0 +1,512 @@
+"""repro.autotune: Pareto-archive invariants (hypothesis), async service
+vs lockstep parity, evaluator workers, cache concurrency, hot-swap deploy."""
+import json
+import random
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: skip ONLY property tests
+    import types
+
+    st = types.SimpleNamespace(
+        integers=lambda *a, **k: None, sampled_from=lambda *a, **k: None,
+        lists=lambda *a, **k: None, tuples=lambda *a, **k: None,
+        floats=lambda *a, **k: None)
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+from repro.autotune import (
+    AnalyticLatencyEvaluator,
+    AutotuneService,
+    EvaluatorPool,
+    AccuracyEvaluator,
+    ParetoArchive,
+    ServiceConfig,
+    dominates,
+)
+from repro.core import EvalCache
+from repro.core.env import QuantEnv
+from repro.core.pareto import as_archive, enumerate_space, pareto_frontier
+from repro.core.search import ReLeQSearch
+from repro.models.model import QuantGroup
+
+GROUPS = [QuantGroup(f"L{i}", ("blocks",), i, (64, 64), 64 * 64, 64 * 64 * 50)
+          for i in range(4)]
+SENS = [2.0, 2.0, 6.0, 2.5]
+
+
+def sensitivity_evaluate(bits):
+    """The LeNet-scale oracle from test_core_rl: layer 2 needs high bits."""
+    acc = 1.0
+    for i, g in enumerate(GROUPS):
+        acc *= 1.0 / (1.0 + np.exp(-(bits[g.name] - SENS[i]) * 2.2))
+    return acc
+
+
+def make_factory(eval_mode="episode_end", evaluate=sensitivity_evaluate):
+    def factory(i):
+        return QuantEnv(groups=GROUPS, evaluate=evaluate,
+                        weight_std={g.name: 0.5 for g in GROUPS},
+                        eval_mode=eval_mode)
+    return factory
+
+
+# ===================================================================== archive
+def _bits(vals):
+    return {f"L{i}": b for i, b in enumerate(vals)}
+
+
+class TestArchive:
+    def test_dominated_point_rejected_and_pruned(self):
+        arch = ParetoArchive()
+        assert arch.add(_bits([4, 4]), acc=0.9, sq=0.5, latency=1.0)
+        # dominated on every axis -> rejected
+        assert not arch.add(_bits([8, 8]), acc=0.8, sq=0.6, latency=2.0)
+        # dominates the incumbent -> replaces it
+        assert arch.add(_bits([2, 2]), acc=0.95, sq=0.4, latency=0.5)
+        assert len(arch) == 1
+        assert arch.entries()[0].acc == 0.95
+
+    def test_incomparable_points_coexist(self):
+        arch = ParetoArchive(objectives=("acc", "sq"))
+        arch.add(_bits([8, 8]), acc=1.0, sq=0.9)
+        arch.add(_bits([2, 2]), acc=0.5, sq=0.3)
+        assert len(arch) == 2
+
+    def test_duplicate_offer_idempotent(self):
+        arch = ParetoArchive()
+        assert arch.add(_bits([4, 4]), acc=0.9, sq=0.5, latency=1.0)
+        assert not arch.add(_bits([4, 4]), acc=0.9, sq=0.5, latency=1.0)
+        assert len(arch) == 1 and arch.offered == 2 and arch.accepted == 1
+
+    def test_latency_objective_requires_latency(self):
+        arch = ParetoArchive()  # default ranks latency
+        with pytest.raises(ValueError):
+            arch.add(_bits([4, 4]), acc=0.9, sq=0.5)
+        ParetoArchive(objectives=("acc", "sq")).add(
+            _bits([4, 4]), acc=0.9, sq=0.5)  # fine without
+
+    def test_select_modes(self):
+        arch = ParetoArchive()
+        arch.add(_bits([8, 8]), acc=1.00, sq=0.9, latency=3.0, reward=0.1)
+        arch.add(_bits([4, 4]), acc=0.97, sq=0.5, latency=2.0, reward=0.5)
+        arch.add(_bits([2, 2]), acc=0.60, sq=0.2, latency=1.0, reward=0.2)
+        assert arch.select("accuracy").acc == 1.00
+        assert arch.select("efficiency", acc_floor=0.95).sq == 0.5
+        assert arch.select("latency", acc_floor=0.95).latency == 2.0
+        assert arch.select("reward").reward == 0.5
+        knee = arch.select("knee")
+        assert knee.acc - knee.sq == max(e.acc - e.sq for e in arch.entries())
+
+    def test_warm_start_roundtrip_and_merge(self, tmp_path):
+        path = str(tmp_path / "archive.json")
+        a = ParetoArchive()
+        a.add(_bits([4, 4]), acc=0.9, sq=0.5, latency=1.25,
+              reward=0.3, meta={"episode": 7})
+        a.add(_bits([8, 2]), acc=0.95, sq=0.6, latency=1.5)
+        a.save(path)
+        b = ParetoArchive.warm_start(path)
+        assert {e.key() for e in b.entries()} == {e.key() for e in a.entries()}
+        assert b.entries()[0].meta == a.entries()[0].meta
+        # composing runs: a later search merges new points in
+        b.add(_bits([2, 2]), acc=0.99, sq=0.4, latency=1.0)
+        c = ParetoArchive()
+        c.merge(b)
+        assert len(c) == len(b)
+        # missing file -> fresh archive
+        fresh = ParetoArchive.warm_start(str(tmp_path / "none.json"))
+        assert len(fresh) == 0
+
+    def test_warm_start_reranks_on_objective_mismatch(self, tmp_path):
+        """A latency-ranked checkpoint resumed without a latency evaluator
+        re-ranks on (acc, sq) instead of crashing the search mid-run."""
+        path = str(tmp_path / "lat.json")
+        a = ParetoArchive()
+        a.add(_bits([4, 4]), acc=0.9, sq=0.5, latency=2.0)
+        # same acc, worse sq — only its better latency keeps it on the
+        # 3-objective frontier
+        a.add(_bits([8, 2]), acc=0.9, sq=0.6, latency=1.0)
+        assert len(a) == 2
+        a.save(path)
+        b = ParetoArchive.warm_start(path, objectives=("acc", "sq"))
+        assert b.objectives == ("acc", "sq")
+        assert len(b) == 1 and b.entries()[0].sq == 0.5
+        # reverse direction: unmeasured entries cannot join a
+        # latency-ranked archive and are dropped, not crashed on
+        path2 = str(tmp_path / "nolat.json")
+        c = ParetoArchive(objectives=("acc", "sq"))
+        c.add(_bits([4, 4]), acc=0.9, sq=0.5)
+        c.save(path2)
+        d = ParetoArchive.warm_start(path2)  # default ranks latency
+        assert d.objectives == ("acc", "sq", "latency") and len(d) == 0
+
+    def test_oracle_matches_pareto_frontier(self):
+        """On an enumerable space the 2-objective archive IS the paper's
+        frontier (core/pareto.py subsumed as the small-network oracle)."""
+        pts = enumerate_space(GROUPS, sensitivity_evaluate, bitset=(2, 4, 8))
+        assert len(pts) == 3 ** 4
+        front = pareto_frontier(pts)
+        arch = as_archive(pts)
+        assert arch.objectives == ("acc", "sq")
+        assert arch.objective_set() == {(p["acc"], p["quant"]) for p in front}
+
+    # ------------------------------------------------------- hypothesis
+    @given(points=st.lists(
+        st.tuples(st.lists(st.sampled_from([2, 4, 8]), min_size=2,
+                           max_size=2),
+                  st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]),
+                  st.sampled_from([0.25, 0.5, 1.0]),
+                  st.floats(1e-9, 10.0, allow_nan=False,
+                            allow_infinity=False)),
+        max_size=14),
+        seed=st.integers(0, 7))
+    @settings(max_examples=120, deadline=None)
+    def test_archive_invariants(self, points, seed):
+        def build(pts):
+            arch = ParetoArchive()
+            for bits, acc, sq, lat in pts:
+                arch.add(_bits(bits), acc=acc, sq=sq, latency=lat)
+            return arch
+
+        arch = build(points)
+        entries = arch.entries()
+        # 1) no archived point dominates another
+        for a in entries:
+            for b in entries:
+                if a is not b:
+                    assert not dominates(a, b, arch.objectives), (a, b)
+        # 2) insertion is order-independent
+        shuffled = list(points)
+        random.Random(seed).shuffle(shuffled)
+        assert {e.key() for e in build(shuffled).entries()} == \
+               {e.key() for e in entries}
+        # 3) JSON warm-start round-trips losslessly
+        back = ParetoArchive.from_dict(json.loads(json.dumps(arch.to_dict())))
+        assert back.objectives == arch.objectives
+        assert {e.key() for e in back.entries()} == {e.key() for e in entries}
+
+
+# ==================================================================== cache
+class TestEvalCacheConcurrency:
+    def test_concurrent_same_key_computes_once(self):
+        cache = EvalCache()
+        calls, gate = [], threading.Event()
+
+        def slow():
+            gate.wait(2.0)
+            calls.append(1)
+            return 42.0
+
+        with ThreadPoolExecutor(8) as ex:
+            futs = [ex.submit(cache.get_or_compute, {"a": 4}, slow)
+                    for _ in range(8)]
+            gate.set()
+            results = [f.result() for f in futs]
+        assert len(calls) == 1                      # coalesced
+        assert all(v == 42.0 for v, _ in results)
+        assert sum(1 for _, hit in results if not hit) == 1
+        stats = cache.stats()
+        assert stats["misses"] == 1 and stats["hits"] == 7
+        assert stats["hit_rate"] == pytest.approx(7 / 8)
+
+    def test_distinct_keys_run_concurrently(self):
+        cache = EvalCache()
+        started = threading.Barrier(4, timeout=5.0)
+
+        def fn():
+            started.wait()  # deadlocks unless 4 computes overlap
+            return 1.0
+
+        with ThreadPoolExecutor(4) as ex:
+            futs = [ex.submit(cache.get_or_compute, {"a": b}, fn)
+                    for b in (2, 3, 4, 5)]
+            assert all(f.result()[0] == 1.0 for f in futs)
+        assert len(cache) == 4
+
+    def test_canonical_key_order_insensitive(self):
+        assert EvalCache.key({"a": 2, "b": 4}) == EvalCache.key({"b": 4, "a": 2})
+
+    def test_hit_rate_in_search_record(self):
+        """The lockstep search surfaces the shared memo's hit rate."""
+        cache = EvalCache()
+
+        def evaluate(bits):
+            v, _ = cache.get_or_compute(bits, lambda: sensitivity_evaluate(bits))
+            return v
+
+        factory = make_factory(evaluate=evaluate)
+        factory.eval_cache = cache
+        res = ReLeQSearch(factory, seed=0).run(episodes=4)
+        assert res.cache_stats["misses"] >= 1
+        assert res.cache_stats["hits"] + res.cache_stats["misses"] > 0
+        assert 0.0 <= res.cache_stats["hit_rate"] <= 1.0
+
+
+# ================================================================== workers
+class TestWorkers:
+    def test_analytic_latency_monotone_and_normalized(self):
+        ev = AnalyticLatencyEvaluator(GROUPS)
+        lo, ref = ev({g.name: 2 for g in GROUPS})
+        hi, ref2 = ev({g.name: 8 for g in GROUPS})
+        assert ref == ref2 == hi                 # 8-bit IS the reference
+        assert 0 < lo < hi
+        mid, _ = ev({g.name: 4 for g in GROUPS})
+        assert lo < mid < hi
+
+    def test_pool_without_latency(self):
+        with EvaluatorPool(AccuracyEvaluator(sensitivity_evaluate,
+                                             thread_safe=True),
+                           num_workers=2) as pool:
+            res = pool.submit({g.name: 8 for g in GROUPS}).result()
+        assert res.latency is None and res.ref_latency is None
+        assert res.acc == pytest.approx(
+            sensitivity_evaluate({g.name: 8 for g in GROUPS}))
+        assert res.latency_ratio() is None
+
+    def test_pool_with_latency_and_shared_cache(self):
+        pool = EvaluatorPool(
+            AccuracyEvaluator(sensitivity_evaluate, thread_safe=True),
+            AnalyticLatencyEvaluator(GROUPS), num_workers=2)
+        bits = {g.name: 4 for g in GROUPS}
+        r1 = pool.submit(bits).result()
+        r2 = pool.submit(bits).result()
+        pool.shutdown()
+        assert not r1.acc_cache_hit and r2.acc_cache_hit
+        assert 0 < r1.latency_ratio() < 1.0
+        assert pool.stats()["acc_cache"]["hits"] >= 1
+        assert pool.stats()["latency_cache"]["entries"] >= 1
+
+
+# ================================================================== service
+class TestService:
+    def test_deferred_episode_matches_episode_end(self):
+        """Deferred rollout + reward_for patch == lockstep episode_end."""
+        calls = []
+
+        def spy(bits):
+            calls.append(1)
+            return sensitivity_evaluate(bits)
+
+        env_d = make_factory("deferred", evaluate=spy)(0)
+        env_e = make_factory("episode_end")(0)
+        actions = [0, 3, 6, 2]
+        env_d.reset(), env_e.reset()
+        for a in actions:
+            _, r_d, done, info_d = env_d.step(a)
+            _, r_e, done_e, info_e = env_e.step(a)
+            if not done:
+                assert r_d == r_e          # provisional rewards identical
+        assert not calls                   # deferred never evaluated
+        acc = sensitivity_evaluate(info_d["bits"])
+        assert env_d.reward_for(acc, info_d["quant"]) == pytest.approx(r_e)
+        assert info_d["bits"] == info_e["bits"]
+
+    def test_async_reaches_lockstep_best_reward(self):
+        """Acceptance pin: seeded async service >= lockstep best reward on
+        the LeNet-scale env (deterministic: in-order, one worker)."""
+        lockstep = ReLeQSearch(make_factory(), num_envs=1, seed=0)
+        res_lock = lockstep.run(episodes=25)
+
+        service = AutotuneService(
+            make_factory(), config=ServiceConfig(
+                num_workers=1, in_order=True, max_inflight=4,
+                batch_episodes=1, seed=0))
+        res_async = service.run(episodes=25)
+        service.shutdown()
+        assert res_async.best_reward >= res_lock.best_reward - 1e-6
+        assert len(res_async.episodes) == 25
+        assert res_async.service_stats["updates"] == 25
+        assert len(service.archive) >= 1
+        # the archive's best-reward entry IS the search's best policy
+        top = service.archive.select("reward")
+        assert top.bits_dict() == res_async.best_bits
+
+    def test_out_of_order_consumption_and_staleness_bound(self):
+        service = AutotuneService(
+            make_factory(), accuracy_thread_safe=True,
+            config=ServiceConfig(num_workers=4, max_inflight=8,
+                                 batch_episodes=3, max_staleness=1, seed=2))
+        res = service.run(episodes=18)
+        service.shutdown()
+        assert len(res.episodes) == 18
+        assert res.service_stats["updates"] >= 1
+        # staleness-bounded: anything older than max_staleness versions
+        # was dropped from update batches, never silently trained on
+        assert res.service_stats["stale_dropped"] >= 0
+        assert res.service_stats["pool"]["completed"] == 18
+        assert np.isfinite(res.best_reward)
+
+    def test_hw_weight_blends_latency_into_reward(self):
+        service = AutotuneService(
+            make_factory(), latency_eval=AnalyticLatencyEvaluator(GROUPS),
+            config=ServiceConfig(num_workers=1, in_order=True,
+                                 batch_episodes=2, hw_weight=1.0, seed=0))
+        res = service.run(episodes=4)
+        service.shutdown()
+        for ep in res.episodes:
+            assert ep["latency"] is not None
+            assert 0 < ep["latency_ratio"] <= 1.0
+            # hw_weight=1: the terminal quant state IS the latency ratio
+            assert ep["q_eff"] == pytest.approx(min(ep["latency_ratio"], 1.0))
+        assert service.archive.objectives == ("acc", "sq", "latency")
+        assert len(service.archive) >= 1
+
+    def test_latency_archive_without_evaluator_rejected_early(self):
+        with pytest.raises(ValueError, match="latency"):
+            AutotuneService(make_factory(),
+                            archive=ParetoArchive())  # ranks latency
+
+
+# ------------------------------------------------- hardware-in-the-loop
+@pytest.mark.slow
+def test_engine_latency_evaluator_measures_and_caches(served_lm):
+    """Real-decode-step measurement: positive wall time, 8-bit reference
+    shared, repeats served from the memo (no second engine build)."""
+    from repro.autotune import EngineLatencyEvaluator
+
+    _, model, params = served_lm
+    ev = EngineLatencyEvaluator(model, params, num_slots=2, prompt_len=4,
+                                decode_steps=3, warmup_steps=1)
+    bits = {n: ev.frozen.get(n, 4) for n in ev.group_names}
+    lat, ref = ev(bits)
+    assert lat > 0 and ref > 0
+    misses = ev.cache.stats()["misses"]
+    lat2, ref2 = ev(bits)
+    assert (lat2, ref2) == (lat, ref)
+    assert ev.cache.stats()["misses"] == misses  # memo hit, no rebuild
+
+
+@pytest.mark.slow
+def test_hlo_latency_evaluator_bits_monotone(served_lm):
+    """Compiled-HLO roofline of the packed decode step: fewer weight bits
+    -> fewer HBM bytes -> lower estimated decode latency."""
+    from repro.autotune import HLOLatencyEvaluator
+
+    _, model, _ = served_lm
+    ev = HLOLatencyEvaluator(model, max_len=16)
+    low, ref = ev({n: ev.frozen.get(n, 2) for n in ev.group_names})
+    high, ref2 = ev({n: ev.frozen.get(n, 8) for n in ev.group_names})
+    assert ref == ref2 == high        # all-8-bit IS the reference
+    assert 0 < low < high
+
+
+# =================================================================== deploy
+@pytest.fixture(scope="module")
+def served_lm():
+    """Smoke LM + an archive holding a real searched-style entry."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestDeploy:
+    def _archive_for(self, model):
+        from repro.core.costmodel import state_of_quantization
+
+        groups = model.quant_groups()
+        arch = ParetoArchive(objectives=("acc", "sq"))
+        four = {g.name: 4 for g in groups}
+        eight = {g.name: 8 for g in groups}
+        arch.add(four, acc=0.97,
+                 sq=state_of_quantization([4] * len(groups), groups))
+        arch.add(eight, acc=1.0,
+                 sq=state_of_quantization([8] * len(groups), groups))
+        return arch, four
+
+    def test_policy_from_entry(self, served_lm):
+        from repro.autotune import policy_from_entry
+        from repro.autotune.archive import ArchiveEntry
+
+        _, model, _ = served_lm
+        arch, four = self._archive_for(model)
+        entry = arch.select("efficiency", acc_floor=0.9)
+        policy = policy_from_entry(model, entry)
+        frozen = model.frozen_bits()
+        # searchable groups take the entry's 4 bits; frozen stay pinned
+        for name in policy.searchable:
+            assert policy.get(name) == 4
+        for name, b in frozen.items():
+            assert policy.get(name) == b
+        bad = ArchiveEntry(bits=(("nope", 4),), acc=1.0, sq=0.5)
+        with pytest.raises(KeyError):
+            policy_from_entry(model, bad)
+
+    def test_hot_swap_ab_parity_on_running_engine(self, served_lm):
+        """Acceptance pin: a policy pulled from the archive, hot-swapped
+        into a running engine, serves token-identical greedy output to a
+        fresh engine built directly with that policy."""
+        from repro.autotune import deploy as deploy_fn
+        from repro.quant.qat import policy_for
+        from repro.serve import ServeEngine
+
+        cfg, model, params = served_lm
+        arch, _ = self._archive_for(model)
+        engine = ServeEngine.from_params(
+            model, params, policy_for(model, default_bits=8),
+            num_slots=2, max_len=24, block_size=8, prefill_chunk=8)
+        # the engine is live: serve traffic at the old 8-bit policy first
+        rng = np.random.default_rng(0)
+        pre = engine.submit(rng.integers(0, cfg.vocab_size, 6), 4)
+        engine.run_until_drained()
+        served_before = engine.output(pre)
+        assert len(served_before) == 4
+
+        prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(2)]
+        policy, report = deploy_fn(arch, model, params, engine,
+                                   select="efficiency", acc_floor=0.9,
+                                   parity_prompts=prompts, max_new_tokens=5)
+        assert all(policy.get(n) == 4 for n in policy.searchable)
+        assert report["parity"]["match"]
+        outs = report["parity"]["outputs"]
+        assert outs["live"] == outs["fresh"]
+        assert all(len(o) == 5 for o in outs["live"])
+        # pre-swap traffic untouched; engine now serves the new policy
+        assert engine.output(pre) == served_before
+
+    def test_hot_swap_holds_queued_requests_for_new_policy(self, served_lm):
+        """Mid-decode rows finish under the OLD weights (their KV was
+        prefilled by them); a request still queued at swap time prefills
+        and decodes entirely under the NEW policy."""
+        from repro.autotune import compile_policy, hot_swap
+        from repro.quant.qat import policy_for
+        from repro.serve import ServeEngine
+
+        cfg, model, params = served_lm
+        kw = dict(num_slots=1, max_len=24, block_size=8, prefill_chunk=8)
+        engine = ServeEngine.from_params(
+            model, params, policy_for(model, default_bits=8), **kw)
+        rng = np.random.default_rng(3)
+        queued_prompt = rng.integers(0, cfg.vocab_size, 6)
+        engine.submit(rng.integers(0, cfg.vocab_size, 6), 6)
+        engine.step()                    # admitted into the only row
+        rid_q = engine.submit(queued_prompt, 5)   # no free row -> queued
+        assert engine.num_running == 1 and engine.num_queued == 1
+
+        sp4 = compile_policy(model, params,
+                             policy_for(model, default_bits=4))
+        report = hot_swap(engine, sp4)
+        assert report["drained_steps"] >= 1
+        assert engine.num_running == 0   # mid-decode row finished...
+        assert engine.num_queued == 1    # ...queued request held back
+        assert engine.sparams is sp4
+        engine.run_until_drained()
+
+        fresh = ServeEngine(model, sp4, **kw)
+        fid = fresh.submit(queued_prompt, 5)
+        fresh.run_until_drained()
+        assert engine.output(rid_q) == fresh.output(fid)

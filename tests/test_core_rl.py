@@ -88,6 +88,22 @@ class TestEnv:
         assert info["bits"]["L0"] == 8
 
 
+class TestSearchResult:
+    def test_average_bits_none_vs_empty(self):
+        """Regression: an explicit empty selection used to silently mean
+        "all groups" (`searchable_only or list(...)`); None and [] are
+        distinct now."""
+        from repro.core.search import SearchResult
+
+        res = SearchResult(best_bits={"L0": 2, "L1": 4, "L2": 6}, best_reward=0.0)
+        assert res.average_bits() == pytest.approx(4.0)
+        assert res.average_bits(None) == pytest.approx(4.0)
+        assert res.average_bits(["L0"]) == pytest.approx(2.0)
+        assert res.average_bits(("L1", "L2")) == pytest.approx(5.0)
+        with pytest.raises(ValueError):
+            res.average_bits([])
+
+
 class TestGAE:
     def test_matches_bruteforce(self):
         rng = np.random.default_rng(0)
@@ -145,7 +161,8 @@ def test_lm_env_evaluate_memoized():
     params = model.init(jax.random.PRNGKey(0))
     data = SyntheticLMData(seed=0, global_batch=2, seq_len=16,
                            vocab=cfg.vocab_size)
-    env = make_lm_env_factory(model, params, data, finetune_steps=1)(0)
+    factory = make_lm_env_factory(model, params, data, finetune_steps=1)
+    env = factory(0)
     bits = {g.name: 8 for g in model.quant_groups()}
     first = env.evaluate(dict(bits))
     cursor = data.state_dict()["index"]          # consumed by the retrain
@@ -153,3 +170,7 @@ def test_lm_env_evaluate_memoized():
     assert data.state_dict()["index"] == cursor  # ...without retraining
     env.evaluate({**bits, "L00.attn.wq": 4})     # different vector
     assert data.state_dict()["index"] > cursor   # -> retrains again
+    # the shared cache (autotune worker pools reuse it) reports hit-rate
+    stats = factory.eval_cache.stats()
+    assert stats == {"entries": 2, "hits": 1, "misses": 2,
+                     "hit_rate": pytest.approx(1 / 3)}
