@@ -20,6 +20,12 @@ structural wins and records them in ``BENCH_serve.json``:
 - memory: at EQUAL paged-leaf cache bytes the paged pool serves strictly
   more concurrent sequences than the slot pool.
 
+A *speculative* section benchmarks quantized self-draft decoding
+(``repro.spec``) on a weight-traffic-bound cell: acceptance rate per
+draft bitwidth, end-to-end tokens/s vs the non-spec paged engine, and
+p50/p99 per-step decode latency, with a hard ``>= 1.3x`` speedup gate at
+the cheapest draft (CI fails the build if speculation stops paying).
+
 Prints ``name,tokens_per_s,derived`` CSV rows (useful tokens only — a
 finished sequence's padding steps never count for any mode).  All modes
 share one jit cache per policy; a warmup pass runs before timing.
@@ -30,6 +36,7 @@ import argparse
 import json
 import os
 import time
+from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +46,12 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.quant.qat import policy_for
 from repro.serve import ServeEngine
+from repro.spec import SpecConfig, snap_params_to_grid
 from repro.train.serve import (
     make_chunked_prefill,
     make_decode_step,
     make_prefill,
+    make_verify_chunk,
     quantize_for_serving,
 )
 
@@ -152,6 +161,117 @@ def run_paged_mixed(model, sparams, cfg, args) -> dict:
     return out
 
 
+def run_spec(args) -> dict:
+    """Speculative section: acceptance x draft bitwidth + tokens/s vs the
+    non-spec paged engine, with the ``>= 1.3x`` gate at the cheapest
+    draft.
+
+    Runs on its own d256/L4 glm4 cell regardless of ``--arch``: the smoke
+    dims are dispatch-bound (every decode step costs the same regardless
+    of bitwidth), so a low-bit draft cannot win there — speculation's
+    margin only appears once per-step cost scales with weight traffic.
+    Weights are first snapped onto the cheapest draft's quantization grid
+    (:func:`repro.spec.draft.snap_params_to_grid`), which makes every
+    low-bit re-pack LOSSLESS: acceptance ~ 1 by construction and honestly
+    measured, so the section isolates the *mechanical* speedup ceiling
+    (draft roll at ~bits/8 of target traffic + one k+1-wide amortized
+    verify) from draft quality, which is a property of trained weights.
+    """
+    dm = args.spec_cell
+    cfg = replace(get_config("glm4-9b", smoke=True), name="spec-cell",
+                  d_model=dm, d_ff=2 * dm, num_layers=4,
+                  num_heads=dm // 32, head_dim=32, num_kv_heads=2)
+    model = build_model(cfg)
+    params = snap_params_to_grid(model, model.init(jax.random.PRNGKey(0)),
+                                 min(args.spec_draft_bits))
+    sparams = quantize_for_serving(model, params,
+                                   policy_for(model, default_bits=8))
+    # homogeneous gens at full occupancy: every decode step carries all
+    # `batch` rows, so median step latency / tokens-per-step is a clean
+    # per-token cost (the gate metric — medians over ~100 steps reject
+    # shared-machine noise that wall-clock tokens/s cannot)
+    rng = np.random.default_rng(3)
+    n = 2 * args.batch
+    prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len)
+               for _ in range(n)]
+    gens = np.full(n, args.gen)
+    max_len = args.prompt_len + args.gen + 1
+    prefill_fn = make_chunked_prefill(model, donate=False)
+    decode_fn = make_decode_step(model, donate=False)
+    verify_fn = make_verify_chunk(model, donate=False)
+
+    def drive(spec):
+        eng = ServeEngine(model, sparams, num_slots=args.batch,
+                          max_len=max_len, cache="paged",
+                          block_size=args.block_size,
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_fn=prefill_fn, decode_fn=decode_fn,
+                          verify_fn=verify_fn, spec=spec)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, int(g) + 1)
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        m = eng.metrics()
+        return m, m["tokens_total"] / dt
+
+    def step_ms(m):
+        return {"decode_step_p50_ms": round(m["decode_step_p50_ms"], 3),
+                "decode_step_p99_ms": round(m["decode_step_p99_ms"], 3)}
+
+    def per_token_ms(m):
+        """Median over decode steps of (step latency / tokens that step
+        emitted) — the gate metric.  Truncated tail windows carry their
+        own (cheap step, few tokens) ratio instead of skewing a global
+        mean, and the median rejects shared-machine latency spikes."""
+        return m["decode_tok_p50_ms"]
+
+    # warmups: land every compile (prefill, 8b decode, per-bits draft
+    # decode, verify) outside the timed drives
+    specs = [None] + [SpecConfig(k=args.spec_k, draft_bits=b)
+                      for b in args.spec_draft_bits]
+    for spec in specs:
+        drive(spec)
+    # best-of-N per mode, modes interleaved: a transient slowdown of the
+    # shared machine lands inside ONE drive, not inside every drive of one
+    # mode — the gate compares each mode's cleanest median
+    best: dict = {}
+    for _ in range(args.spec_trials):
+        for spec in specs:
+            m, tps = drive(spec)
+            key = spec.draft_bits if spec else None
+            if key not in best or per_token_ms(m) < per_token_ms(best[key][0]):
+                best[key] = (m, tps)
+    m0, tps0 = best[None]
+    out = {
+        "cell": {"arch": "glm4-9b", "d_model": cfg.d_model,
+                 "num_layers": cfg.num_layers},
+        "k": args.spec_k,
+        "target_bits": 8,
+        "trials": args.spec_trials,
+        "baseline": {"tokens_per_s": round(tps0, 1),
+                     "per_token_ms": round(per_token_ms(m0), 3),
+                     **step_ms(m0)},
+        "drafts": {},
+    }
+    for bits in args.spec_draft_bits:
+        m, tps = best[bits]
+        out["drafts"][str(bits)] = {
+            "tokens_per_s": round(tps, 1),
+            "per_token_ms": round(per_token_ms(m), 3),
+            "speedup_vs_paged": round(per_token_ms(m0) / per_token_ms(m), 3),
+            "acceptance_rate": round(m["spec"]["acceptance_rate"], 3),
+            "proposed": m["spec"]["proposed"],
+            "accepted": m["spec"]["accepted"],
+            **step_ms(m),
+        }
+    top = max(d["speedup_vs_paged"] for d in out["drafts"].values())
+    assert top >= 1.3, (
+        f"speculative decoding gate: best speedup {top:.3f}x < 1.3x "
+        f"over non-spec paged on the spec cell — {out}")
+    return out
+
+
 def bench(args):
     """-> (csv rows, (cfg, model, sparams at args.bits[0]) for reuse)."""
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -214,7 +334,8 @@ def bench(args):
     return rows, (cfg, model, first_sparams)
 
 
-def write_record(args, rows, path: str, paged_mixed: dict | None = None) -> dict:
+def write_record(args, rows, path: str, paged_mixed: dict | None = None,
+                 speculative: dict | None = None) -> dict:
     """Persist the per-bitwidth static/continuous/paged tokens/s plus the
     mixed-prompt-length paged section so the perf trajectory is comparable
     across PRs (CI uploads this file as an artifact; humans diff it)."""
@@ -237,6 +358,8 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None) -> dict
     }
     if paged_mixed is not None:
         rec["paged_mixed_prompts"] = paged_mixed
+    if speculative is not None:
+        rec["speculative"] = speculative
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -262,6 +385,19 @@ def main() -> None:
                     help="paged engine: tokens per KV block")
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="paged engine: fixed prefill chunk length")
+    ap.add_argument("--spec", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the speculative-decoding section (1.3x gate)")
+    ap.add_argument("--spec-k", type=int, default=8,
+                    help="speculative window (draft tokens per step)")
+    ap.add_argument("--spec-trials", type=int, default=3,
+                    help="timed drives per mode (best-of, noise rejection)")
+    ap.add_argument("--spec-cell", type=int, default=512,
+                    help="spec-section cell width (d_model; d_ff/heads "
+                         "scale with it)")
+    ap.add_argument("--spec-draft-bits", type=int, nargs="+", default=[2, 4],
+                    help="draft bitwidths to sweep (weights snapped to the "
+                         "cheapest one's grid)")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON record path ('' disables)")
     args = ap.parse_args()
@@ -279,8 +415,22 @@ def main() -> None:
           f"vs slot={mixed['slot']['peak_concurrent']} at "
           f"kv_bytes {mixed['paged']['kv_bytes']} <= "
           f"{mixed['slot']['kv_bytes']}", flush=True)
+    spec = None
+    if args.spec:
+        spec = run_spec(args)
+        base = spec["baseline"]["tokens_per_s"]
+        print(f"serve_spec_paged@8b,{base:.1f},"
+              f"cell=d{spec['cell']['d_model']}L{spec['cell']['num_layers']};"
+              f"k={spec['k']}", flush=True)
+        for bits, d in spec["drafts"].items():
+            print(f"serve_spec@{bits}b_draft,{d['tokens_per_s']:.1f},"
+                  f"acceptance={d['acceptance_rate']:.3f};"
+                  f"speedup={d['speedup_vs_paged']:.2f}x;"
+                  f"p50={d['decode_step_p50_ms']:.2f}ms;"
+                  f"p99={d['decode_step_p99_ms']:.2f}ms", flush=True)
     if args.out:
-        write_record(args, rows, args.out, paged_mixed=mixed)
+        write_record(args, rows, args.out, paged_mixed=mixed,
+                     speculative=spec)
         print(f"wrote {args.out}", flush=True)
 
 

@@ -8,7 +8,9 @@ stack instead of a synchronous offline loop:
                staleness-bounded importance correction
 - workers.py   evaluator pool: short-QAT accuracy + hardware-in-the-loop
                latency (real ServeEngine decode steps, compiled-HLO
-               roofline, or the analytic TPU model)
+               roofline, or the analytic TPU model) + draftability
+               (candidate drafts for a fixed 8-bit target via
+               ``repro.spec``; reward = speculative seconds/token)
 - archive.py   persistent Pareto archive over (rel-acc, SQ, latency)
                with dominance pruning, JSON checkpoints and warm-start
 - deploy.py    archive winner -> packed weights -> hot-swap into a live
@@ -28,6 +30,7 @@ from repro.autotune.service import AutotuneService, ServiceConfig  # noqa: F401
 from repro.autotune.workers import (  # noqa: F401
     AccuracyEvaluator,
     AnalyticLatencyEvaluator,
+    DraftabilityEvaluator,
     EngineLatencyEvaluator,
     EvalResult,
     EvaluatorPool,

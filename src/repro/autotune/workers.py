@@ -24,6 +24,13 @@ A candidate bitwidth policy is scored on up to two axes:
   Each reports ``ref_latency`` at the all-8-bit reference so the service
   can fold the *ratio* into the reward alongside SQ.
 
+- **draftability** (:class:`DraftabilityEvaluator`): the candidate bits
+  play the *quantized self-draft* under a fixed 8-bit target
+  (``repro.spec``), and the measured quantity is end-to-end speculative
+  seconds per emitted token — so the reward optimizes what the archive's
+  frontier is actually consumed for by ``SpecConfig(draft_policy=...)``:
+  serving throughput with this policy drafting, acceptance included.
+
 :class:`EvaluatorPool` fans candidates out to a thread pool and returns
 futures — the async service consumes them out of order.
 """
@@ -212,6 +219,77 @@ class EngineLatencyEvaluator(_LatencyBase):
         for _ in range(self.decode_steps):
             engine.step()
         return (time.perf_counter() - t0) / self.decode_steps
+
+
+class DraftabilityEvaluator(_LatencyBase):
+    """Hardware-in-the-loop *draftability*: how fast does the fixed 8-bit
+    target serve when the CANDIDATE policy plays the quantized self-draft?
+
+    Measures end-to-end speculative seconds per emitted token over real
+    ``ServeEngine`` steps — draft roll, batched verify, and rejection
+    overhead all included, so a candidate that proposes quickly but gets
+    rejected scores exactly as badly as it serves.  The reference is the
+    all-8-bit "draft" (a draft as expensive as the target — speculation's
+    no-win point), so ``latency_ratio() < 1`` iff the candidate actually
+    accelerates serving end to end.  Like :class:`EngineLatencyEvaluator`
+    this must run under the pool's measurement lock."""
+
+    def __init__(self, model, params, *, k: int = 4, num_slots: int = 2,
+                 prompt_len: int = 4, decode_steps: int = 6,
+                 warmup_steps: int = 2, block_size: int = 8,
+                 prefill_chunk: int = 8, vocab: int | None = None,
+                 seed: int = 0):
+        groups = model.quant_groups()
+        super().__init__((g.name for g in groups), model.frozen_bits())
+        self.model, self.params = model, params
+        self.k = k
+        self.num_slots = num_slots
+        self.prompt_len = prompt_len
+        self.decode_steps = decode_steps
+        self.warmup_steps = warmup_steps
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.vocab = vocab if vocab is not None else model.cfg.vocab_size
+        self.seed = seed
+        self._sparams8 = None  # 8-bit target, packed once and reused
+
+    def _measure(self, bits_by_name: dict) -> float:
+        import numpy as np
+
+        from repro.quant.policy import QuantPolicy
+        from repro.quant.qat import policy_for
+        from repro.serve import ServeEngine
+        from repro.spec import SpecConfig
+        from repro.train.serve import quantize_for_serving
+
+        if self._sparams8 is None:
+            self._sparams8 = quantize_for_serving(
+                self.model, self.params, policy_for(self.model, 8))
+        policy = QuantPolicy.from_array(
+            self.group_names, [bits_by_name[n] for n in self.group_names])
+        # budget so no request finishes mid-measurement (an idle row would
+        # charge the candidate for scheduling, not drafting)
+        gen = (self.warmup_steps + self.decode_steps + 2) * (self.k + 1)
+        max_len = self.prompt_len + gen + 1
+        engine = ServeEngine(
+            self.model, self._sparams8, num_slots=self.num_slots,
+            max_len=max_len, cache="paged", block_size=self.block_size,
+            prefill_chunk=self.prefill_chunk,
+            spec=SpecConfig(k=self.k, draft_policy=policy))
+        rng = np.random.default_rng(self.seed)
+        for _ in range(self.num_slots):
+            engine.submit(rng.integers(0, self.vocab, self.prompt_len), gen)
+        while engine.num_running < self.num_slots:  # admit + prefill
+            engine.step()
+        for _ in range(self.warmup_steps):
+            engine.step()
+        tok0 = engine.metrics()["tokens_total"]
+        t0 = time.perf_counter()
+        for _ in range(self.decode_steps):
+            engine.step()
+        dt = time.perf_counter() - t0
+        emitted = engine.metrics()["tokens_total"] - tok0
+        return dt / max(emitted, 1)
 
 
 class EvaluatorPool:

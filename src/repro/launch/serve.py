@@ -11,6 +11,13 @@ params, packs them at a ReLeQ policy, and serves a synthetic workload:
   one release as the parity baseline.
 - ``--mode static``: the legacy one-shot fixed-batch greedy loop (kept
   as the parity/latency baseline).
+
+``--spec-k K --draft-bits B`` turns on speculative decoding with the
+quantized self-draft (``repro.spec``): the same packed weights re-read
+at B bitplanes roll K tokens per window and one batched verify call
+scores them against the full-precision policy — output is distribution-
+exact, so every other flag means the same thing with spec on.  Paged
+cache only.
 """
 from __future__ import annotations
 
@@ -69,12 +76,17 @@ def _static(args, cfg, model, sparams, policy):
 
 
 def _continuous(args, cfg, model, sparams, policy):
+    from repro.spec import SpecConfig
+
     max_len = args.prompt_len + args.gen + 1
+    spec = (SpecConfig(k=args.spec_k, draft_bits=args.draft_bits)
+            if args.spec_k else None)
     engine = ServeEngine(model, sparams, num_slots=args.num_slots,
                          max_len=max_len, cache=args.cache,
                          block_size=args.block_size,
                          num_blocks=args.num_blocks,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         spec=spec)
     rng = np.random.default_rng(1)
     gens = [int(g) for g in
             rng.integers(max(1, args.gen // 2), args.gen + 1, args.requests)]
@@ -98,6 +110,12 @@ def _continuous(args, cfg, model, sparams, policy):
           + (f" preemptions={m['preemptions']} "
              f"block_occ={m['mean_block_occupancy']:.2f}"
              if args.cache == "paged" else ""))
+    if "spec" in m:
+        s = m["spec"]
+        print(f"spec k={s['k']} draft_bits={args.draft_bits} "
+              f"windows={s['windows']} "
+              f"acceptance={s['acceptance_rate']:.3f} "
+              f"({s['accepted']}/{s['proposed']})")
     for r in m["requests"]:
         print(f"  req {r['id']}: {r['new_tokens']} tokens, "
               f"ttft={r['ttft_steps']} steps / {r['ttft_s'] * 1e3:.0f} ms, "
@@ -134,6 +152,13 @@ def main():
                     help="continuous mode: synthetic workload size")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous mode: steps between request arrivals")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="continuous mode: speculate this many tokens per "
+                         "window with the quantized self-draft (0 = off; "
+                         "requires --cache paged)")
+    ap.add_argument("--draft-bits", type=int, default=2,
+                    help="bitwidth of the self-draft's packed-weight view "
+                         "(fewer bitplanes read per draft step)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)

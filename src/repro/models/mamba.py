@@ -65,9 +65,10 @@ def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64,
 
     ``init_state`` ({"h", "conv"}, as returned here) continues a cached
     sequence — chunked prefill feeds each chunk the previous chunk's state.
-    ``valid`` (traced scalar) masks the Δ of positions ≥ valid to zero so a
-    fixed-shape chunk's garbage tail neither decays nor drives the state,
-    and the returned conv state ends at the last *valid* token.
+    ``valid`` (traced scalar, or a (B,) vector for per-row lengths) masks
+    the Δ of positions ≥ valid to zero so a fixed-shape chunk's garbage
+    tail neither decays nor drives the state, and the returned conv state
+    ends at the last *valid* token.
     """
     B, S, D = x.shape
     xb = apply_linear(x, p["in_x"])          # (B,S,Di)
@@ -77,9 +78,10 @@ def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64,
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
     dt, Bm, Cm = _ssm_features(xc, p)
     if valid is not None:
+        valid = jnp.asarray(valid, jnp.int32).reshape(-1)  # scalar -> (1,)
         # Δ = 0 at padding: decay exp(0·A) = 1 and input term 0 — the state
         # passes through the garbage tail untouched
-        dt = dt * (jnp.arange(S) < valid)[None, :, None]
+        dt = dt * (jnp.arange(S)[None, :] < valid[:, None])[..., None]
     A = -jnp.exp(p["A_log"])                 # (Di,N), negative
     Di, N = A.shape
 
@@ -129,8 +131,10 @@ def mamba_forward(x: jax.Array, p: dict, *, chunk: int = 64,
             prev = (conv0.astype(xb.dtype) if conv0 is not None
                     else jnp.zeros((B, ks - 1, Di), xb.dtype))
             xpad = jnp.concatenate([prev, xb], axis=1)
-            end = valid if valid is not None else S
-            conv_state = jax.lax.dynamic_slice_in_dim(xpad, end, ks - 1, axis=1)
+            end = valid if valid is not None else jnp.full((1,), S, jnp.int32)
+            idx = end[:, None] + jnp.arange(ks - 1, dtype=jnp.int32)[None, :]
+            conv_state = jnp.take_along_axis(
+                xpad, jnp.broadcast_to(idx, (B, ks - 1))[..., None], axis=1)
         else:
             conv_state = xb[:, -(ks - 1):]
             if S < ks - 1:

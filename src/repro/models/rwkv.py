@@ -173,10 +173,11 @@ class RWKV6LM:
     def _time_mix(self, x, xprev, p, state0=None, valid=None):
         """x: (B,S,D); xprev: previous-token x (B,S,D).  Returns (out, state).
 
-        ``valid`` (traced scalar) masks positions ≥ valid out of the wkv
-        state update (k → 0, log-decay → 0), so a fixed-shape prefill
-        chunk's garbage tail leaves the carried state exactly as if the
-        chunk had ended at ``valid``."""
+        ``valid`` (traced scalar, or a (B,) vector for per-row lengths)
+        masks positions ≥ valid out of the wkv state update (k → 0,
+        log-decay → 0), so a fixed-shape prefill chunk's garbage tail
+        leaves the carried state exactly as if the chunk had ended at
+        ``valid``."""
         cfg, H, hd = self.cfg, self.H, self.cfg.hd
         B, S, D = x.shape
         tm = p["tm"]
@@ -187,7 +188,8 @@ class RWKV6LM:
         g = jax.nn.silu(apply_linear(lerp(tm["mu_g"]), tm["wg"]).astype(jnp.float32))
         logw = self._decay(lerp(tm["mu_w"]), tm).reshape(B, S, H, hd)
         if valid is not None:
-            keep = (jnp.arange(S) < valid)[None, :, None, None]
+            valid = jnp.asarray(valid, jnp.int32).reshape(-1)  # scalar -> (1,)
+            keep = (jnp.arange(S)[None, :] < valid[:, None])[:, :, None, None]
             k = jnp.where(keep, k, jnp.zeros_like(k))
             logw = jnp.where(keep, logw, jnp.zeros_like(logw))
         if state0 is None:
@@ -336,46 +338,84 @@ class RWKV6LM:
         }
         return logits, cache
 
-    def prefill_chunk(self, params, cache, tokens, seq, start, valid):
-        """One fixed-shape prompt chunk into pooled-cache row ``seq``.
+    def _chunk_body(self, params, cache, tokens, rows, starts, valids):
+        """Shared fixed-shape chunk forward over pooled-cache rows.
 
         The wkv/token-shift state is O(1) per sequence, so "paged" RWKV is
-        plain slot semantics: each chunk continues row ``seq``'s carried
-        state (padding masked out of the update — see ``_time_mix``) and
-        writes it back.  Same one-executable contract as the transformer
-        path.  Returns (logits (1, 1, V) f32 for the last valid token,
-        cache).
+        plain slot semantics: each lane continues its row's carried state
+        (padding masked out of the update — see ``_time_mix``) and writes
+        it back.  ``tokens`` (B, C) int32 with garbage past each lane's
+        ``valid``; ``rows``/``starts``/``valids`` (B,) int32 data — one
+        executable for every (prompt length × chunk index × batch
+        composition).  Drives both the admission prefill (B = 1) and the
+        speculative verifier (B = every pool row).  Returns (final-norm
+        hidden (B, C, D), cache).
         """
         cfg = self.cfg
         cache = dict(cache)
-        h = jnp.take(_embed_table(params), tokens, axis=0)   # (1, C, D)
+        h = jnp.take(_embed_table(params), tokens, axis=0)   # (B, C, D)
         # first chunk (start == 0): zero the carried state — a fresh
         # admission may be reusing a row whose previous occupant's state
         # is still cached.  Later chunks carry the cached state through.
-        continuing = start > 0
+        continuing = (starts > 0)[:, None, None]
+        last_idx = jnp.maximum(valids - 1, 0)[:, None, None]
         for l in range(cfg.num_layers):
             p = self._layer_slice(params, l)
             h1 = rms_norm(h, p["ln1"], cfg.norm_eps)
-            xtm0 = jnp.where(continuing, cache["x_tm"][l, seq],
-                             0).astype(cache["x_tm"].dtype)[None]
-            wkv0 = jnp.where(continuing, cache["wkv"][l, seq], 0.0)[None]
+            xtm0 = jnp.where(continuing, cache["x_tm"][l, rows],
+                             0).astype(cache["x_tm"].dtype)
+            wkv0 = jnp.where(continuing[..., None], cache["wkv"][l, rows], 0.0)
             tm_out, st = self._time_mix(
-                h1, self._shift(h1, xtm0), p, state0=wkv0, valid=valid)
+                h1, self._shift(h1, xtm0), p, state0=wkv0, valid=valids)
             h = h + constrain(tm_out, batch_axes(), seq_axis(), None)
             h2 = rms_norm(h, p["ln2"], cfg.norm_eps)
-            xcm0 = jnp.where(continuing, cache["x_cm"][l, seq],
-                             0).astype(cache["x_cm"].dtype)[None]
+            xcm0 = jnp.where(continuing, cache["x_cm"][l, rows],
+                             0).astype(cache["x_cm"].dtype)
             cm_out = self._channel_mix(h2, self._shift(h2, xcm0), p)
             h = h + constrain(cm_out, batch_axes(), seq_axis(), None)
-            cache["wkv"] = cache["wkv"].at[l, seq].set(st[0])
-            cache["x_tm"] = cache["x_tm"].at[l, seq].set(
-                h1[0, valid - 1][None].astype(cache["x_tm"].dtype))
-            cache["x_cm"] = cache["x_cm"].at[l, seq].set(
-                h2[0, valid - 1][None].astype(cache["x_cm"].dtype))
+            cache["wkv"] = cache["wkv"].at[l, rows].set(st)
+            cache["x_tm"] = cache["x_tm"].at[l, rows].set(
+                jnp.take_along_axis(h1, last_idx, axis=1)
+                .astype(cache["x_tm"].dtype))
+            cache["x_cm"] = cache["x_cm"].at[l, rows].set(
+                jnp.take_along_axis(h2, last_idx, axis=1)
+                .astype(cache["x_cm"].dtype))
         hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache["length"] = cache["length"].at[rows].set(starts + valids)
+        return hn, cache
+
+    def prefill_chunk(self, params, cache, tokens, seq, start, valid):
+        """One fixed-shape prompt chunk into pooled-cache row ``seq``.
+
+        Same one-executable contract as the transformer path — see
+        ``_chunk_body``.  Returns (logits (1, 1, V) f32 for the last valid
+        token, cache).
+        """
+        hn, cache = self._chunk_body(
+            params, cache, tokens,
+            jnp.asarray(seq, jnp.int32).reshape(1),
+            jnp.asarray(start, jnp.int32).reshape(1),
+            jnp.asarray(valid, jnp.int32).reshape(1))
         last = jax.lax.dynamic_slice_in_dim(hn, valid - 1, 1, axis=1)
         logits = apply_linear(last, params["lm_head"]).astype(jnp.float32)
-        cache["length"] = cache["length"].at[seq].set(start + valid)
+        return logits, cache
+
+    def verify_chunk(self, params, cache, tokens, starts, valids):
+        """Score a speculative window for EVERY pool row in one batched
+        fixed-shape call (the chunked verifier behind ``repro.spec``).
+
+        ``tokens`` (B, C): lane r is pool row r — [last committed token,
+        draft_1..draft_k, garbage pad]; ``starts``/``valids`` (B,) data
+        (valid = 0 marks a dead lane whose state update is fully masked).
+        Returns (logits (B, C, V) f32 at *every* position — index j scores
+        the continuation after tokens[:, :j+1] — and the cache with each
+        live row's wkv/token-shift state advanced through its window).
+        """
+        B = tokens.shape[0]
+        hn, cache = self._chunk_body(
+            params, cache, tokens, jnp.arange(B, dtype=jnp.int32),
+            starts, valids)
+        logits = apply_linear(hn, params["lm_head"]).astype(jnp.float32)
         return logits, cache
 
     # ------------------------------------------------------------ quant API

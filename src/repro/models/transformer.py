@@ -432,11 +432,12 @@ class TransformerLM:
         return logits, cache
 
     # ----------------------------------------------------- chunked prefill
-    def _chunk_attn(self, x, p, positions, pos_in, cache, layer, seq,
-                    start, valid):
-        """Chunk attention sublayer against the paged pool: queries attend
-        [this sequence's cached pages ; the chunk itself], then the chunk's
-        kv is scattered into the owning blocks (padding lanes dropped)."""
+    def _chunk_attn(self, x, p, positions, pos_in, cache, layer, rows,
+                    starts, valids):
+        """Chunk attention sublayer against the paged pool, batched over
+        pool ``rows``: each lane's queries attend [that row's cached
+        pages ; the chunk itself], then the chunk's kv is scattered into
+        the owning blocks (padding lanes dropped)."""
         cfg = self.cfg
         window = cfg.sliding_window
         B, C, D = x.shape
@@ -453,30 +454,31 @@ class TransformerLM:
             k = apply_mrope(k, pos_in, cfg.rope_theta, cfg.mrope_sections)
 
         kc, vc = cache["k"][layer], cache["v"][layer]   # (NB, bs, KV, hd)
-        bt_row = cache["block_tables"][seq]             # (nb,)
+        bt = cache["block_tables"][rows]                # (B, nb)
         bs = kc.shape[1]
-        nb = bt_row.shape[0]
+        nb = bt.shape[1]
         Tc = nb * bs                                    # tokens per sequence
-        k_ctx = kc[bt_row].reshape(1, Tc, KV, hd)
-        v_ctx = vc[bt_row].reshape(1, Tc, KV, hd)
-        s_idx = jnp.arange(Tc, dtype=jnp.int32)
+        k_ctx = kc[bt].reshape(B, Tc, KV, hd)
+        v_ctx = vc[bt].reshape(B, Tc, KV, hd)
+        s_idx = jnp.arange(Tc, dtype=jnp.int32)[None, :]
         if window is None:
-            ctx_pos = jnp.where(s_idx < start, s_idx, -1)
+            ctx_pos = jnp.where(s_idx < starts[:, None], s_idx, -1)
         else:
             # ring: slot s holds the youngest token p ≡ s (mod Tc), p < start
-            p_tok = start - 1 - ((start - 1 - s_idx) % Tc)
+            p_tok = starts[:, None] - 1 - ((starts[:, None] - 1 - s_idx) % Tc)
             ctx_pos = jnp.where(p_tok >= 0, p_tok, -1)
-        out = chunk_attention(q, k_ctx, v_ctx, ctx_pos[None], k, v,
+        out = chunk_attention(q, k_ctx, v_ctx, ctx_pos, k, v,
                               positions, window=window)
 
-        i_idx = jnp.arange(C, dtype=jnp.int32)
-        logical = positions[0]
+        i_idx = jnp.arange(C, dtype=jnp.int32)[None, :]
+        logical = positions
         if window is not None:
             logical = logical % Tc
-        blk = jnp.take(bt_row, jnp.clip(logical // bs, 0, nb - 1))
-        phys = jnp.where(i_idx < valid, blk, kc.shape[0])  # OOB -> dropped
-        kc = kc.at[phys, logical % bs].set(k[0].astype(kc.dtype), mode="drop")
-        vc = vc.at[phys, logical % bs].set(v[0].astype(vc.dtype), mode="drop")
+        blk = jnp.take_along_axis(bt, jnp.clip(logical // bs, 0, nb - 1),
+                                  axis=1)
+        phys = jnp.where(i_idx < valids[:, None], blk, kc.shape[0])  # OOB -> dropped
+        kc = kc.at[phys, logical % bs].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[phys, logical % bs].set(v.astype(vc.dtype), mode="drop")
         cache["k"] = cache["k"].at[layer].set(kc)
         cache["v"] = cache["v"].at[layer].set(vc)
 
@@ -484,25 +486,60 @@ class TransformerLM:
         out = apply_linear(out, p["attn"]["wo"])
         return x + constrain(out, batch_axes(), seq_axis(), None)
 
-    def _chunk_ssm(self, x, p, cache, layer, seq, start, valid):
-        """Hybrid SSM branch over a chunk, carrying this sequence's cached
-        state; padding tokens are masked out of the state update.  The
+    def _chunk_ssm(self, x, p, cache, layer, rows, starts, valids):
+        """Hybrid SSM branch over a chunk, carrying each row's cached
+        state; padding tokens are masked out of the state update.  A row's
         first chunk (start == 0) zeros the carried state — a freshly
         admitted sequence may be reusing a row whose previous occupant's
         final state is still in the cache."""
         h = rms_norm(x, p["ln1"], self.cfg.norm_eps)
-        continuing = start > 0
-        state = {"h": jnp.where(continuing, cache["ssm_h"][layer, seq],
-                                0.0)[None],
-                 "conv": jnp.where(continuing, cache["ssm_conv"][layer, seq],
-                                   0).astype(cache["ssm_conv"].dtype)[None]}
+        continuing = (starts > 0)[:, None, None]
+        state = {"h": jnp.where(continuing, cache["ssm_h"][layer, rows], 0.0),
+                 "conv": jnp.where(continuing, cache["ssm_conv"][layer, rows],
+                                   0).astype(cache["ssm_conv"].dtype)}
         y, st = mamba_mod.mamba_forward(
             h, p["ssm"], chunk=self.cfg.chunk_size, return_state=True,
-            init_state=state, valid=valid)
-        cache["ssm_h"] = cache["ssm_h"].at[layer, seq].set(st["h"][0])
-        cache["ssm_conv"] = cache["ssm_conv"].at[layer, seq].set(
-            st["conv"][0].astype(cache["ssm_conv"].dtype))
+            init_state=state, valid=valids)
+        cache["ssm_h"] = cache["ssm_h"].at[layer, rows].set(st["h"])
+        cache["ssm_conv"] = cache["ssm_conv"].at[layer, rows].set(
+            st["conv"].astype(cache["ssm_conv"].dtype))
         return y
+
+    def _chunk_body(self, params, cache, tokens, rows, starts, valids):
+        """Shared fixed-shape chunk forward over pooled-cache rows.
+
+        ``tokens`` (B, C) int32, garbage past each lane's ``valid``;
+        ``rows``/``starts``/``valids`` are (B,) int32 *data* mapping batch
+        lane -> pool row / tokens already cached / live chunk length, so
+        one executable serves every (prompt length × chunk index × batch
+        composition).  Both the admission prefill (B = 1, one row) and the
+        speculative verifier (B = every pool row) lower through this body.
+        Returns (final-norm hidden (B, C, D), cache).
+        """
+        cfg = self.cfg
+        cache = dict(cache)
+        B, C = tokens.shape
+        h = self._embed_in(params, tokens, None)
+        positions = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        pos_in = (jnp.broadcast_to(positions[None], (3, B, C))
+                  if cfg.rope == "mrope" else positions)
+        if cfg.rope == "abs_sin":
+            h = h + self._abs_sin(positions, cfg.d_model).astype(h.dtype)
+        for l in range(cfg.num_layers):
+            p = self._layer_slice(params, l)
+            if cfg.family == "hybrid":
+                a = self._chunk_attn(h, p, positions, pos_in, cache, l, rows,
+                                     starts, valids) - h
+                s = self._chunk_ssm(h, p, cache, l, rows, starts, valids)
+                mix = jax.nn.sigmoid(p["mix"]).astype(h.dtype)
+                h = h + mix * a + (1.0 - mix) * s
+            else:
+                h = self._chunk_attn(h, p, positions, pos_in, cache, l, rows,
+                                     starts, valids)
+            h, _ = self._ffn(h, p, exact=True)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache["length"] = cache["length"].at[rows].set(starts + valids)
+        return h, cache
 
     def prefill_chunk(self, params, cache, tokens, seq, start, valid):
         """One fixed-shape prompt chunk into pooled-cache row ``seq``.
@@ -514,35 +551,35 @@ class TransformerLM:
         exists for.  Returns (logits (1, 1, V) f32 for the last *valid*
         token — the only row an admission ever reads — and the cache).
         """
-        cfg = self.cfg
-        cache = dict(cache)
-        C = tokens.shape[1]
-        h = self._embed_in(params, tokens, None)
-        positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]
-        pos_in = (jnp.broadcast_to(positions[None], (3, 1, C))
-                  if cfg.rope == "mrope" else positions)
-        if cfg.rope == "abs_sin":
-            h = h + self._abs_sin(positions, cfg.d_model).astype(h.dtype)
-        for l in range(cfg.num_layers):
-            p = self._layer_slice(params, l)
-            if cfg.family == "hybrid":
-                a = self._chunk_attn(h, p, positions, pos_in, cache, l, seq,
-                                     start, valid) - h
-                s = self._chunk_ssm(h, p, cache, l, seq, start, valid)
-                mix = jax.nn.sigmoid(p["mix"]).astype(h.dtype)
-                h = h + mix * a + (1.0 - mix) * s
-            else:
-                h = self._chunk_attn(h, p, positions, pos_in, cache, l, seq,
-                                     start, valid)
-            h, _ = self._ffn(h, p, exact=True)
-        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h, cache = self._chunk_body(
+            params, cache, tokens,
+            jnp.asarray(seq, jnp.int32).reshape(1),
+            jnp.asarray(start, jnp.int32).reshape(1),
+            jnp.asarray(valid, jnp.int32).reshape(1))
         # only the last valid token's logits are ever consumed: slice the
         # hidden state BEFORE the d_model x V readout (a C-wide vocab
         # matmul per chunk otherwise, discarded for all but the last chunk)
         last = jax.lax.dynamic_slice_in_dim(h, valid - 1, 1, axis=1)
         logits = self._readout(params, last)
-        cache["length"] = cache["length"].at[seq].set(start + valid)
         return logits, cache
+
+    def verify_chunk(self, params, cache, tokens, starts, valids):
+        """Score a speculative window for EVERY pool row in one batched
+        fixed-shape call (the chunked verifier behind ``repro.spec``).
+
+        ``tokens`` (B, C): lane r is pool row r — [last committed token,
+        draft_1..draft_k, garbage pad]; ``starts``/``valids`` (B,) data
+        (valid = 0 marks a dead lane: its reads are masked, its writes
+        drop to the garbage block).  Returns (logits (B, C, V) f32 at
+        *every* position — index j scores the continuation after
+        tokens[:, :j+1] — and the cache, with target-model K/V now written
+        for all valid positions of the window).
+        """
+        B = tokens.shape[0]
+        h, cache = self._chunk_body(
+            params, cache, tokens, jnp.arange(B, dtype=jnp.int32),
+            starts, valids)
+        return self._readout(params, h), cache
 
     # ------------------------------------------------------------ quant API
     def quant_groups(self, seq_len: int = 4096) -> list[QuantGroup]:

@@ -135,6 +135,31 @@ def dequant_packed(packed, scale, bits: int):
     return codes.astype(jnp.float32) / n * scale
 
 
+def repack_weight(packed: Packed, bits: int) -> Packed:
+    """Low-bit *view* of an already-packed weight: dequantize the planes
+    and re-pack at ``bits`` < ``packed.bits``.
+
+    This is how ``repro.spec`` derives its quantized self-draft — the
+    draft is the SAME weights at fewer bitplanes (decode HBM traffic
+    scales with plane count), so no second set of master weights is ever
+    materialized.  If ``bits >= packed.bits`` the input is returned
+    unchanged (re-packing could only lose precision).  Expert banks
+    (leading E axis on the planes) re-pack per expert.
+    """
+    if bits >= packed.bits:
+        return packed
+
+    def one(planes, scale):
+        w = dequant_packed(planes, scale, packed.bits)
+        return pack_weight(w, bits)
+
+    if packed.planes.ndim == 4:  # (E, bits, K//8, N) expert bank
+        planes, scale = jax.vmap(one)(packed.planes, packed.scale)
+    else:
+        planes, scale = one(packed.planes, packed.scale)
+    return Packed(planes, scale, bits)
+
+
 def pad_contraction_to_8(w: np.ndarray) -> np.ndarray:
     """Zero-pad axis 0 (contraction) up to a multiple of 8."""
     K = w.shape[0]

@@ -44,7 +44,13 @@ Architecture (one file per concern)
   ``step()`` / ``run_until_drained()`` + per-request (TTFT, latency,
   preemptions) and aggregate (tokens/s, row + block occupancy) metrics.
   ``ServeEngine.from_params`` packs training params at a ReLeQ
-  ``QuantPolicy`` once, at construction.
+  ``QuantPolicy`` once, at construction.  ``spec=SpecConfig(...)`` turns
+  on speculative decoding with a quantized self-draft (``repro.spec``):
+  the same packed weights re-read at fewer bitplanes roll k tokens per
+  window through the SAME paged block tables (zero extra KV blocks), one
+  fixed-shape ``verify_chunk`` call scores all k+1 positions at the
+  serving policy, and exact rejection sampling keeps the emitted stream
+  distribution-identical to non-speculative serving.
 
 Decode attends by block table through ``kernels.ops.paged_attention``: a
 Pallas kernel whose BlockSpec index map IS the block table (each live
@@ -72,6 +78,9 @@ Guarantees
   slot engine to the legacy static loop — for the same request stream
   (greedy, all three model families; pinned in
   ``tests/test_serve_paged.py`` / ``tests/test_serve_engine.py``).
+- Speculative output is token-identical to non-speculative under greedy
+  and distribution-exact at temperature>0 (chi-square gated), for ANY
+  draft policy — acceptance only moves speed, never the stream.
 - Allocator exactness (hypothesis-tested): no double-alloc, no leak,
   free-list exhaustion surfaces as preemption, never a crash.
 

@@ -27,9 +27,22 @@ other sequences — and the paged decode gathers each sequence's pages into
 exactly the contiguous rows the slot pool stores, which is what pins
 paged-vs-slot token parity (tests/test_serve_paged.py).
 
+Speculative decoding (``spec=SpecConfig(...)``, paged cache only): each
+step the engine rolls up to ``spec.k`` tokens per row with a *quantized
+self-draft* — the same packed weights re-packed at fewer bitplanes
+(``repro.spec``), reading and writing the SAME ``PagedCachePool`` blocks
+through the row's block table, so speculation allocates zero extra KV —
+then scores all ``k + 1`` positions of every row in ONE batched
+``verify_chunk`` call and resolves each window with the
+distribution-exact rejection sampler (``repro.spec.sampler``).  Greedy
+spec output is token-identical to non-spec decode; sampled output is
+exactly target-distributed.  EOS / ``max_new_tokens`` can land anywhere
+inside a window (multi-token emission per step).
+
 Metrics: per-request TTFT (seconds *and* engine steps), wall latency,
-token counts and preemptions, plus aggregate tokens/s, mean row occupancy
-and (paged) mean block occupancy over decode steps.
+token counts and preemptions, plus aggregate tokens/s, p50/p99 per-step
+decode latency, mean row occupancy, (paged) mean block occupancy, and
+(spec) windows/proposed/accepted counts with the acceptance rate.
 """
 from __future__ import annotations
 
@@ -47,6 +60,7 @@ from repro.train.serve import (
     make_chunked_prefill,
     make_decode_step,
     make_prefill,
+    make_verify_chunk,
 )
 
 
@@ -55,7 +69,8 @@ class ServeEngine:
                  max_len: int = 256, cache: str = "paged",
                  block_size: int = 16, num_blocks: int | None = None,
                  prefill_chunk: int = 16, max_pending: int = 0,
-                 decode_fn=None, prefill_fn=None, mesh=None):
+                 decode_fn=None, prefill_fn=None, mesh=None,
+                 spec=None, verify_fn=None):
         if cache not in ("paged", "slot"):
             raise ValueError(f"cache={cache!r} (want 'paged' or 'slot')")
         self.model = model
@@ -84,6 +99,15 @@ class ServeEngine:
         self._length_bound = (
             max_len if "k" in self.pool.cache
             and model.cfg.sliding_window is None else None)
+        # speculative decoding: draft = the target's own packed weights at
+        # a lower-bit policy, sharing this pool's blocks (repro.spec)
+        self.spec = spec
+        if spec is not None:
+            if cache != "paged":
+                raise ValueError("speculative decoding requires "
+                                 "cache='paged'")
+            self._verify = verify_fn or make_verify_chunk(model)
+            self._draft_sparams = self._resolve_draft(spec)
         self._next_id = 0
         self._step_idx = 0
         self._tokens_total = 0
@@ -91,6 +115,11 @@ class ServeEngine:
         self._occupancy_sum = 0.0
         self._block_occupancy_sum = 0.0
         self._run_seconds = 0.0
+        self._decode_seconds: list[float] = []  # wall time per decode step
+        self._decode_tokens: list[int] = []     # tokens that step emitted
+        self._spec_windows = 0
+        self._spec_proposed = 0
+        self._spec_accepted = 0
         self.requests: dict[int, Request] = {}
 
     @classmethod
@@ -99,6 +128,16 @@ class ServeEngine:
         from repro.train.serve import quantize_for_serving
 
         return cls(model, quantize_for_serving(model, params, policy), **kw)
+
+    def _resolve_draft(self, spec):
+        """SpecConfig -> draft serving params (most-specific source wins:
+        pre-packed sparams > per-group policy > uniform draft_bits)."""
+        if spec.draft_sparams is not None:
+            return spec.draft_sparams
+        from repro.spec.draft import low_bit_view
+
+        return low_bit_view(self.model, self.sparams,
+                            bits=spec.draft_bits, policy=spec.draft_policy)
 
     # ------------------------------------------------------------- frontend
     def submit(self, prompt, max_new_tokens: int,
@@ -182,34 +221,216 @@ class ServeEngine:
                 self._finish(self.scheduler.finish(slot), events)
 
         # 2) reserve next-token blocks; exhaustion preempts youngest
-        if self.cache_kind == "paged":
+        #    (spec mode reserves per-window inside _spec_step instead)
+        if self.cache_kind == "paged" and self.spec is None:
             for req in self.scheduler.reserve_for_decode():
                 events["preempted"].append(req.request_id)
 
-        # 3) one packed decode step over every running row
+        # 3) one packed decode step (or speculative window) over every
+        #    running row
         if self.scheduler.running:
             self._occupancy_sum += self.pool.occupancy()
             if self.cache_kind == "paged":
                 self._block_occupancy_sum += self.pool.block_occupancy()
             self._decode_steps += 1
-            toks = np.zeros((self.pool.num_slots, 1), np.int32)
-            for slot, seq in self.scheduler.running.items():
-                toks[slot, 0] = seq.last_token
-            logits, cache = self._decode(
-                self.sparams, self.pool.step_cache(), jnp.asarray(toks))
-            self.pool.accept(cache)
-            rows = np.asarray(logits[:, -1])  # (num_slots, V)
-            for slot, seq in list(self.scheduler.running.items()):
-                tok = seq.request.select_token(rows[slot])
-                self._emit(seq.request, tok, events)
-                if seq.request.done:
-                    self._finish(self.scheduler.finish(slot), events)
-                else:
-                    self.scheduler.advance(slot, tok)
+            t_dec = time.perf_counter()
+            n_tok = len(events["tokens"])
+            if self.spec is not None:
+                self._spec_step(events)
+            else:
+                self._decode_once(events)
+            self._decode_seconds.append(time.perf_counter() - t_dec)
+            self._decode_tokens.append(len(events["tokens"]) - n_tok)
 
         self._step_idx += 1
         self._run_seconds += time.perf_counter() - t0
         return events
+
+    def _decode_once(self, events: dict) -> None:
+        """One packed single-token decode over every running row."""
+        toks = np.zeros((self.pool.num_slots, 1), np.int32)
+        for slot, seq in self.scheduler.running.items():
+            toks[slot, 0] = seq.last_token
+        logits, cache = self._decode(
+            self.sparams, self.pool.step_cache(), jnp.asarray(toks))
+        self.pool.accept(cache)
+        rows = np.asarray(logits[:, -1])  # (num_slots, V)
+        for slot, seq in list(self.scheduler.running.items()):
+            tok = seq.request.select_token(rows[slot])
+            self._emit(seq.request, tok, events)
+            if seq.request.done:
+                self._finish(self.scheduler.finish(slot), events)
+            else:
+                self.scheduler.advance(slot, tok)
+
+    # ------------------------------------------------------------ spec path
+    def _spec_step(self, events: dict) -> None:
+        """One speculative window: draft-roll k tokens per row with the
+        low-bit self-draft, verify all k + 1 positions of every row in ONE
+        batched chunk call, resolve by exact rejection sampling, emit.
+
+        Cache discipline (the no-extra-KV contract): the draft reads and
+        writes the SAME pool blocks through each row's block table; rows
+        not drafting a given depth have their block-table row pointed at
+        the garbage block for that call, so no live block is ever touched
+        on their behalf.  Recurrent (non-paged) state is snapshotted
+        before the draft roll and restored for the verifier, whose
+        padding-masked chunk pass recomputes it exactly; a rejection
+        triggers one fix-up verify at the accepted length (same shapes —
+        same executable).  ``length`` is host-authoritative and rewritten
+        after emission, so rejected positions' stale KV sits beyond every
+        attention mask until genuinely overwritten.
+        """
+        from repro.spec.sampler import KIND_DRAFT, draft_token, spec_window
+
+        pool, sched, spec = self.pool, self.scheduler, self.spec
+        B = pool.num_slots
+        ring_cap = None
+        if pool.paged_keys and self.model.cfg.sliding_window is not None:
+            # ring caches: a window must never wrap — a wrapped draft
+            # write would clobber live in-window KV that a rejection
+            # cannot restore.  Rows near the wrap point fall back to
+            # k = 0 (still 1 token/step via the verifier).
+            ring_cap = pool.blocks_per_seq * pool.block_size
+
+        want: dict[int, int] = {}
+        for slot, seq in sched.running.items():
+            req = seq.request
+            k = min(spec.k, req.max_new_tokens - len(req.output_tokens) - 1)
+            if ring_cap is not None:
+                k = min(k, ring_cap - 1 - seq.cached_len)
+            want[slot] = max(k, 0)
+        granted, preempted = sched.reserve_for_spec(want)
+        for req in preempted:
+            events["preempted"].append(req.request_id)
+        if not sched.running:
+            return
+        max_k = max(granted.values())
+        if max_k == 0:
+            self._decode_once(events)  # nothing to speculate this step
+            return
+
+        lengths0 = {s: seq.cached_len for s, seq in sched.running.items()}
+        # snapshot O(1) recurrent leaves (explicit copies: the decode and
+        # verify calls donate the cache dict, invalidating originals)
+        snap_keys = [key for key in pool.cache
+                     if key not in pool.paged_keys and key != "length"]
+        snap = {key: jnp.copy(pool.cache[key]) for key in snap_keys}
+
+        # --- draft roll: k low-bit decode steps through the shared pool
+        draft_toks: dict[int, list[int]] = {s: [] for s in granted}
+        q_probs: dict[int, list] = {s: [] for s in granted}
+        cur = np.zeros((B, 1), np.int32)
+        for slot, seq in sched.running.items():
+            cur[slot, 0] = seq.last_token
+        # masked tables are nested (grants only expire as depth grows), so
+        # upload one device array per DISTINCT mask, not one per depth —
+        # in the common all-rows-full-window case that is a single upload
+        bt_key, bt_dev = None, None
+        for depth in range(1, max_k + 1):
+            cache_d = dict(pool.cache)
+            bt = pool.block_tables.copy()
+            for slot in range(B):
+                if granted.get(slot, 0) < depth:
+                    bt[slot] = 0  # garbage sink: this row sits this one out
+            key = bt.tobytes()
+            # re-upload if the mask changed OR a donating backend consumed
+            # the previous buffer (CPU ignores donation; accelerators don't)
+            if key != bt_key or bt_dev.is_deleted():
+                bt_key, bt_dev = key, jnp.asarray(bt)
+            cache_d["block_tables"] = bt_dev
+            logits, cache = self._decode(self._draft_sparams, cache_d,
+                                         jnp.asarray(cur))
+            pool.accept(cache)
+            rows = np.asarray(logits[:, -1])
+            for slot, seq in sched.running.items():
+                if granted[slot] < depth:
+                    continue
+                req = seq.request
+                pos = len(req.output_tokens) + depth - 1
+                tok, q = draft_token(rows[slot], req.sampling,
+                                     req.rng_for(pos, KIND_DRAFT))
+                draft_toks[slot].append(tok)
+                q_probs[slot].append(q)
+                cur[slot, 0] = tok
+
+        # --- verify: ONE batched fixed-shape chunk over every pool row.
+        # Width is always spec.k + 1 (short windows pad with valid < C),
+        # so every step reuses one executable.
+        C = spec.k + 1
+        ver_toks = np.zeros((B, C), np.int32)
+        starts = np.zeros((B,), np.int32)
+        valids = np.zeros((B,), np.int32)
+        for slot, seq in sched.running.items():
+            k = granted[slot]
+            ver_toks[slot, 0] = seq.last_token
+            ver_toks[slot, 1:1 + k] = draft_toks[slot]
+            starts[slot] = lengths0[slot]
+            valids[slot] = k + 1
+        bt_full = jnp.asarray(pool.block_tables)  # shared with the fix-up
+        cache_v = dict(pool.cache)
+        for key in snap_keys:  # keep `snap` alive for a possible fix-up
+            cache_v[key] = jnp.copy(snap[key])
+        cache_v["block_tables"] = bt_full
+        ver_toks_dev, starts_dev = jnp.asarray(ver_toks), jnp.asarray(starts)
+        logits, cache = self._verify(
+            self.sparams, cache_v, ver_toks_dev, starts_dev,
+            jnp.asarray(valids))
+        pool.accept(cache)
+        target = np.asarray(logits)  # (B, C, V) float32
+
+        # --- resolve each window on the host (exact rejection sampling)
+        emitted_by_slot: dict[int, list[int]] = {}
+        for slot, seq in sched.running.items():
+            req = seq.request
+            k = granted[slot]
+            emitted, accepted = spec_window(
+                draft_toks[slot], target[slot, :k + 1], req.sampling,
+                req.rng_for, base_pos=len(req.output_tokens),
+                q_probs=q_probs[slot])
+            emitted_by_slot[slot] = emitted
+            self._spec_windows += 1
+            self._spec_proposed += k
+            self._spec_accepted += accepted
+
+        # --- recurrent fix-up: a rejection means the verifier advanced
+        # wkv/SSM state through tokens that were never emitted; re-run the
+        # same chunk at the accepted lengths (identical prefix => exact)
+        if snap and any(len(emitted_by_slot[s]) < int(valids[s])
+                        for s in emitted_by_slot):
+            valids2 = np.zeros((B,), np.int32)
+            for slot in emitted_by_slot:
+                valids2[slot] = len(emitted_by_slot[slot])
+            cache_f = dict(pool.cache)
+            for key in snap_keys:
+                cache_f[key] = snap[key]
+            # a donating verify consumed the first call's inputs
+            cache_f["block_tables"] = (jnp.asarray(pool.block_tables)
+                                       if bt_full.is_deleted() else bt_full)
+            if ver_toks_dev.is_deleted():
+                ver_toks_dev, starts_dev = (jnp.asarray(ver_toks),
+                                            jnp.asarray(starts))
+            _, cache = self._verify(
+                self.sparams, cache_f, ver_toks_dev, starts_dev,
+                jnp.asarray(valids2))
+            pool.accept(cache)
+
+        # --- emit (EOS / budget can land mid-window), then restore the
+        # host-authoritative lengths: the verifier wrote start + valid
+        lengths1 = np.zeros((B,), np.int32)
+        for slot, seq in list(sched.running.items()):
+            req = seq.request
+            finished = False
+            for tok in emitted_by_slot[slot]:
+                self._emit(req, tok, events)
+                if req.done:
+                    self._finish(sched.finish(slot), events)
+                    finished = True
+                    break
+                sched.advance(slot, tok)
+            if not finished:
+                lengths1[slot] = seq.cached_len
+        pool.cache["length"] = jnp.asarray(lengths1)
 
     def run_until_drained(self, max_steps: int = 100_000) -> dict:
         steps = 0
@@ -262,12 +483,31 @@ class ServeEngine:
             "preemptions": self.scheduler.preemptions,
             "requests": per_request,
         }
+        if self._decode_seconds:
+            ds = np.asarray(self._decode_seconds)
+            out["decode_step_p50_ms"] = float(np.percentile(ds, 50) * 1e3)
+            out["decode_step_p99_ms"] = float(np.percentile(ds, 99) * 1e3)
+            per_tok = [s / t for s, t in zip(self._decode_seconds,
+                                            self._decode_tokens) if t > 0]
+            if per_tok:  # step cost normalized by what the step delivered
+                out["decode_tok_p50_ms"] = float(
+                    np.percentile(per_tok, 50) * 1e3)
         if self.cache_kind == "paged":
             out["mean_block_occupancy"] = (
                 self._block_occupancy_sum / self._decode_steps
                 if self._decode_steps else 0.0)
             out["block_size"] = self.pool.block_size
             out["num_blocks"] = self.pool.num_blocks
+        if self.spec is not None:
+            out["spec"] = {
+                "k": self.spec.k,
+                "windows": self._spec_windows,
+                "proposed": self._spec_proposed,
+                "accepted": self._spec_accepted,
+                "acceptance_rate": (
+                    self._spec_accepted / self._spec_proposed
+                    if self._spec_proposed else 0.0),
+            }
         return out
 
     def output(self, request_id: int) -> list[int]:

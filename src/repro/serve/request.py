@@ -8,7 +8,14 @@ sampling parameters.  ``max_new_tokens`` counts every emitted token
 
 Token selection lives here too (``select_token``): greedy when
 ``temperature == 0`` (the parity-critical default), otherwise
-temperature/top-k sampling from a per-request deterministic generator.
+temperature/top-k sampling from a per-request, per-POSITION deterministic
+stream: the generator key folds in (seed, request_id, position, kind), so
+the token drawn at output position ``i`` does not depend on batch
+composition, scheduling order, or — crucially for the speculative parity
+gate — on how many positions a spec window emitted at once.  ``kind``
+separates the independent draws speculative decoding makes at one
+position (draft proposal, accept/reject uniform, residual draw) from the
+baseline token draw.
 """
 from __future__ import annotations
 
@@ -57,7 +64,6 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        self._rng = np.random.default_rng(self.sampling.seed)
 
     # ------------------------------------------------------------------
     @property
@@ -91,16 +97,33 @@ class Request:
             return None
         return self.first_token_time - self.arrival_time
 
+    def rng_for(self, position: int, kind: int = 0) -> np.random.Generator:
+        """Deterministic stream for one (output position, draw kind).
+
+        Seeded from ``SeedSequence((seed, request_id, position, kind))`` —
+        a fresh generator per draw, so the value consumed at a position is
+        a pure function of the request identity, independent of batch
+        composition or whether the position was reached by plain decode or
+        inside a speculative window."""
+        return np.random.default_rng(np.random.SeedSequence(
+            (self.sampling.seed, self.request_id, position, kind)))
+
     def select_token(self, logits: np.ndarray) -> int:
         """Pick the next token from a (V,) float32 logits row."""
-        return select_token(logits, self.sampling, self._rng)
+        return select_token(logits, self.sampling,
+                            self.rng_for(len(self.output_tokens)))
 
 
-def select_token(logits: np.ndarray, sampling: SamplingParams,
-                 rng: np.random.Generator) -> int:
+def warp_probs(logits: np.ndarray,
+               sampling: SamplingParams) -> np.ndarray | None:
+    """Logits -> the warped sampling distribution (V,) float64, or ``None``
+    for greedy (temperature 0).  Temperature, then top-k, then nucleus —
+    the single definition shared by baseline decode and the speculative
+    rejection sampler (which must warp draft and target *identically* for
+    the accept ratio p/q to be meaningful)."""
     logits = np.asarray(logits, np.float64).reshape(-1)
     if sampling.temperature <= 0.0:
-        return int(np.argmax(logits))
+        return None
     z = logits / sampling.temperature
     if sampling.top_k:
         kth = np.partition(z, -sampling.top_k)[-sampling.top_k]
@@ -118,4 +141,12 @@ def select_token(logits: np.ndarray, sampling: SamplingParams,
         mask[order[:cut]] = True
         p = np.where(mask, p, 0.0)
         p /= p.sum()
+    return p
+
+
+def select_token(logits: np.ndarray, sampling: SamplingParams,
+                 rng: np.random.Generator) -> int:
+    p = warp_probs(logits, sampling)
+    if p is None:
+        return int(np.argmax(np.asarray(logits, np.float64).reshape(-1)))
     return int(rng.choice(p.size, p=p))

@@ -106,6 +106,39 @@ class ContinuousScheduler:
                     break
         return preempted
 
+    def reserve_for_spec(self, want: dict[int, int]
+                         ) -> tuple[dict[int, int], list[Request]]:
+        """Reserve ``cached_len + k + 1`` tokens of cache per running row
+        for a speculative window of ``want[slot] = k`` draft tokens,
+        oldest first.  Under block pressure a row's window SHRINKS toward
+        zero before anyone is preempted — losing speculation for a step
+        is strictly cheaper than a preempt-replay cycle — and only when
+        even plain decode growth (k = 0) cannot be covered does the
+        youngest sequence get preempted, exactly like
+        :meth:`reserve_for_decode`.  Returns (granted window per surviving
+        slot, preempted requests).  Speculation never reserves beyond what
+        the target itself will need (callers cap k by the remaining token
+        budget), so the no-extra-blocks invariant holds by construction.
+        """
+        granted: dict[int, int] = {}
+        preempted: list[Request] = []
+        for slot in sorted(self.running, key=lambda s: self.running[s].order):
+            if slot not in self.running:  # already preempted this pass
+                continue
+            seq = self.running[slot]
+            k = max(int(want.get(slot, 0)), 0)
+            while slot in self.running:
+                while k > 0 and not self.pool.ensure(slot,
+                                                     seq.cached_len + k + 1):
+                    k -= 1  # shrink the window before taking blocks
+                if k > 0 or self.pool.ensure(slot, seq.cached_len + 1):
+                    granted[slot] = k
+                    break
+                victim = max(self.running,
+                             key=lambda s: self.running[s].order)
+                preempted.append(self.preempt(victim))
+        return granted, preempted
+
     def preempt(self, slot: int) -> Request:
         """Evict a running sequence: blocks back to the pool, request back
         to the queue head (it keeps its emitted tokens; re-admission

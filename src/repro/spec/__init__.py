@@ -1,0 +1,49 @@
+"""repro.spec — speculative decoding with a quantized self-draft.
+
+ReLeQ's Pareto archive already holds cheap, accurate *drafts of the same
+weights* for free: a low-bit policy is the target model with fewer
+bitplanes streamed per matmul.  This subsystem turns that frontier into
+a speculative decoder over the existing paged serving stack:
+
+- :mod:`repro.spec.config` — :class:`SpecConfig`, the
+  ``ServeEngine(spec=...)`` knob (window k + how to derive the draft).
+- :mod:`repro.spec.draft` — :func:`low_bit_view` (re-pack the target's
+  packed weights at fewer planes; everything else shared by reference),
+  :class:`DraftSelector` (pick a draft policy off a ``ParetoArchive``
+  frontier), :func:`snap_params_to_grid` (controlled-acceptance
+  experiments).
+- :mod:`repro.spec.sampler` — the distribution-exact rejection sampler
+  resolving each window on the host (greedy degenerates to token-exact
+  parity with plain decode).
+
+The drafter and verifier live in the engine/models: the draft rolls k
+tokens through the same jit'd ``decode_step`` (its ``Packed`` leaves
+carry static bits, so draft and target are two executables under one
+wrapper) writing into the SAME ``PagedCachePool`` blocks the target
+owns — speculation allocates zero extra KV — and the target then scores
+all k + 1 positions of every row in ONE batched ``verify_chunk`` call
+through the fixed-shape chunked-prefill path.
+"""
+from repro.spec.config import SpecConfig
+from repro.spec.draft import DraftSelector, low_bit_view, snap_params_to_grid
+from repro.spec.sampler import (
+    KIND_ACCEPT,
+    KIND_DRAFT,
+    KIND_RESIDUAL,
+    KIND_TOKEN,
+    draft_token,
+    spec_window,
+)
+
+__all__ = [
+    "SpecConfig",
+    "DraftSelector",
+    "low_bit_view",
+    "snap_params_to_grid",
+    "KIND_ACCEPT",
+    "KIND_DRAFT",
+    "KIND_RESIDUAL",
+    "KIND_TOKEN",
+    "draft_token",
+    "spec_window",
+]

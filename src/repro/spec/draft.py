@@ -1,0 +1,162 @@
+"""Draft construction: low-bit views of packed weights + archive picks.
+
+The draft model of ``repro.spec`` is never a second network — it is the
+target's own bitplane-packed weights re-packed at fewer planes
+(:func:`repro.quant.pack.repack_weight`), so decode HBM traffic drops
+with the plane count while every non-weight tensor (norms, routers,
+decay LoRA, caches) is *shared by construction*.  Two entry points:
+
+- :func:`low_bit_view` — serving params -> draft serving params under a
+  uniform ``bits`` or a full per-group policy.
+- :class:`DraftSelector` — pick a draft policy off a
+  :class:`~repro.autotune.archive.ParetoArchive` frontier: among entries
+  whose relative accuracy clears ``acc_floor`` (a proxy for acceptance
+  rate — the draft only pays off when it usually agrees with the
+  target), take the cheapest by average bits.
+
+:func:`snap_params_to_grid` supports controlled experiments: projecting
+training weights onto the ``bits`` uniform grid makes the low-bit
+re-pack lossless (grid levels are exactly representable at 8 bits too),
+so draft/target agreement — and hence acceptance — approaches 1 while
+the draft still streams ``bits``-plane traffic.  The spec benchmark uses
+it to isolate the *mechanical* speedup ceiling from draft quality.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.autotune.archive import ArchiveEntry, ParetoArchive
+from repro.quant.pack import Packed, dequant_packed, pack_weight, repack_weight
+from repro.quant.policy import QuantPolicy
+from repro.quant.qat import get_by_path, policy_for, set_by_path
+
+
+def low_bit_view(model, sparams, bits: int | None = None,
+                 policy: QuantPolicy | None = None):
+    """Serving params -> draft serving params at a lower-bit policy.
+
+    Walks the model's quant groups through the *serving* layout (per-layer
+    lists) and re-packs each :class:`Packed` leaf at the policy's
+    bitwidth; dense/QDQ leaves (norms, embeddings — a gather, no matmul
+    traffic to save) pass through by reference.  With ``bits`` given, the
+    policy is ``policy_for(model, bits)`` — frozen-at-8 groups keep their
+    8 planes, mirroring what any searched policy would serve.  Re-packing
+    to >= the current plane count is a no-op (never "up-quantize"), so the
+    view is monotone: the draft is at most as wide as the target.
+    """
+    if policy is None:
+        if bits is None:
+            raise ValueError("low_bit_view needs bits or a policy")
+        policy = policy_for(model, bits)
+
+    blocks = sparams["blocks"]
+    nested = bool(blocks) and isinstance(blocks[0], list)
+    nb = [list(sub) for sub in blocks] if nested else list(blocks)
+    out = dict(sparams)
+    for g in model.quant_groups():
+        want = policy.get(g.name)
+        if g.path[0] == "blocks":
+            if nested:
+                sub, rest = g.path[1], g.path[2:]
+                tree = nb[sub][g.layer]
+            else:
+                rest, tree = g.path[1:], nb[g.layer]
+            leaf = get_by_path(tree, rest)
+            if isinstance(leaf, Packed) and want < leaf.bits:
+                tree = set_by_path(tree, rest, repack_weight(leaf, want))
+                if nested:
+                    nb[sub][g.layer] = tree
+                else:
+                    nb[g.layer] = tree
+        elif g.path == ("lm_head",):
+            head = out["lm_head"]
+            if isinstance(head, Packed) and want < head.bits:
+                out["lm_head"] = repack_weight(head, want)
+    out["blocks"] = nb
+    return out
+
+
+@dataclass(frozen=True)
+class DraftSelector:
+    """Pick a quantized self-draft policy off the Pareto frontier.
+
+    ``acc_floor`` gates on relative accuracy (entries that disagree with
+    the fp model rarely agree with the 8-bit target either);
+    ``max_avg_bits`` optionally caps draft width (a 7-bit "draft" saves
+    almost no traffic).  Among survivors the *cheapest* entry wins
+    (lowest average bits, ties to higher accuracy): draft cost scales
+    with plane count, and acceptance differences above the floor are
+    second-order next to a 4x traffic cut.
+    """
+
+    acc_floor: float = 0.95
+    max_avg_bits: float | None = None
+
+    def candidates(self, archive: ParetoArchive) -> list[ArchiveEntry]:
+        out = []
+        for e in archive.entries():
+            if e.acc < self.acc_floor:
+                continue
+            avg = _avg_bits(e)
+            if self.max_avg_bits is not None and avg > self.max_avg_bits:
+                continue
+            out.append(e)
+        return out
+
+    def select(self, archive: ParetoArchive) -> ArchiveEntry | None:
+        """Cheapest sufficiently-accurate entry, or None (empty/too
+        strict — caller falls back to a uniform ``draft_bits``)."""
+        cands = self.candidates(archive)
+        if not cands:
+            return None
+        return min(cands, key=lambda e: (_avg_bits(e), -e.acc, e.bits))
+
+    def policy(self, model, archive: ParetoArchive) -> QuantPolicy | None:
+        """Archive -> draft QuantPolicy aligned with ``model``'s groups."""
+        from repro.autotune.deploy import policy_from_entry
+
+        entry = self.select(archive)
+        if entry is None:
+            return None
+        return policy_from_entry(model, entry)
+
+
+def _avg_bits(entry: ArchiveEntry) -> float:
+    bits = [b for _, b in entry.bits]
+    return sum(bits) / max(len(bits), 1)
+
+
+def _roundtrip(w, bits: int):
+    if w.ndim > 2:  # stacked layers / expert banks: recurse per slice
+        return jax.vmap(lambda m: _roundtrip(m, bits))(w)
+    planes, scale = pack_weight(w.astype(jnp.float32), bits)
+    return dequant_packed(planes, scale, bits).astype(w.dtype)
+
+
+def snap_params_to_grid(model, params, bits: int):
+    """Project training params onto the ``bits`` quantization grid.
+
+    Every *searchable* quant group is round-tripped through
+    pack -> dequant at ``bits``, so subsequent packing at ``bits`` or
+    wider reconstructs the weights near-exactly — the
+    controlled-acceptance regime the spec benchmark measures its speedup
+    ceiling in.  Frozen groups are skipped: the draft's low-bit view
+    never re-packs them (re-pack to >= current bits is a no-op), so they
+    are bit-identical between draft and target already.  Non-group
+    leaves are untouched.
+    """
+    frozen = model.frozen_bits()
+    out = params
+    seen: set[tuple] = set()
+    for g in model.quant_groups():
+        # stacked training layouts share one leaf across layers (the path
+        # has no layer index) — round-trip each leaf exactly once
+        if g.path in seen or g.name in frozen:
+            continue
+        seen.add(g.path)
+        leaf = get_by_path(out, g.path)
+        out = set_by_path(out, g.path, _roundtrip(leaf, bits))
+    return out

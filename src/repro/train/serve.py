@@ -134,3 +134,20 @@ def make_chunked_prefill(model, donate: bool = True):
         return model.prefill_chunk(sparams, cache, tokens, seq, start, valid)
 
     return jax.jit(pre, donate_argnums=(1,) if donate else ())
+
+
+def make_verify_chunk(model, donate: bool = True):
+    """jit'd batched speculative verifier over the pooled cache.
+
+    ``ver(sparams, cache, tokens (B, C), starts (B,), valids (B,))`` — B is
+    every pool row, C = spec window (k + 1); starts/valids are data, so all
+    k+1 positions of every row are scored by ONE executable per window
+    width (pinned alongside the prefill counter in the spec parity tests).
+    Returns all-position logits (B, C, V) — the rejection sampler consumes
+    them on the host.
+    """
+
+    def ver(sparams, cache, tokens, starts, valids):
+        return model.verify_chunk(sparams, cache, tokens, starts, valids)
+
+    return jax.jit(ver, donate_argnums=(1,) if donate else ())

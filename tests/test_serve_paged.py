@@ -1,7 +1,8 @@
 """Paged KV-cache engine: paged-vs-slot token parity across all three
 model families, one-executable chunked prefill, block-allocator
-invariants (hypothesis property test), and preemption-not-crash on block
-exhaustion."""
+invariants (hypothesis property test), preemption-not-crash on block
+exhaustion, and speculative decoding gates (greedy spec token parity,
+rejection-sampler distribution exactness, zero-extra-block invariant)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,9 +27,11 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.quant.qat import policy_for
 from repro.serve import PagedCachePool, ServeEngine
+from repro.spec import SpecConfig
 from repro.train.serve import (
     make_chunked_prefill,
     make_decode_step,
+    make_verify_chunk,
     quantize_for_serving,
 )
 
@@ -274,6 +277,148 @@ def test_allocator_errors_and_garbage_block():
     with pytest.raises(ValueError):
         PagedCachePool(_FakeModel(), 1, max_len=8, block_size=4,
                        num_blocks=2)          # < one full sequence
+
+
+# ------------------------------------------------------------- speculation
+@pytest.mark.parametrize("arch", ["glm4-9b", "hymba-1.5b", "rwkv6-1.6b"])
+def test_spec_greedy_parity_all_families(arch):
+    """Greedy speculative decode is token-identical to plain paged decode
+    on all three families.  Random weights + a 2-bit draft put acceptance
+    near zero, so this is the HARD regime: every window exercises
+    rejection, the recurrent-state fix-up (hymba SSM / rwkv wkv), and the
+    hymba sliding-window ring cap — and the fix-up reuses the one verify
+    executable (same fixed C = k + 1 shapes)."""
+    cfg, model, sparams = _served(arch)
+    prompts = [_prompt(cfg, 3 + 2 * s, seed=s) for s in (1, 2, 3)]
+    gens = [4, 5, 6]
+    want, _ = _run(model, sparams, prompts, gens, cache="paged",
+                   block_size=4, prefill_chunk=4)
+    ver = make_verify_chunk(model, donate=False)
+    got, eng = _run(model, sparams, prompts, gens, cache="paged",
+                    block_size=4, prefill_chunk=4, verify_fn=ver,
+                    spec=SpecConfig(k=3, draft_bits=2))
+    assert got == want
+    assert eng.metrics()["spec"]["windows"] > 0
+    assert ver._cache_size() == 1  # windows AND fix-ups: one executable
+    assert eng.pool.num_free == eng.pool.num_slots
+    assert eng.pool.num_free_blocks == eng.pool.num_blocks - 1  # no leak
+
+
+def test_spec_rejection_sampler_preserves_target_distribution():
+    """Chi-square pin on the speculative rejection sampler: for a draft q
+    deliberately far from the target p, the emitted token must still be
+    EXACTLY p-distributed — both for a sampled draft (accept ratio p/q +
+    residual) and for a point-mass draft (q=None: accept p(d), residual
+    p with d removed)."""
+    from repro.serve.request import SamplingParams, warp_probs
+    from repro.spec import KIND_DRAFT, draft_token, spec_window
+
+    t_logits = np.asarray([1.0, 0.3, -0.5, 2.0, 0.0, -1.2])
+    q_logits = np.asarray([2.0, -1.0, 1.5, 0.0, 0.5, -2.0])  # far from p
+    bonus = np.zeros_like(t_logits)  # row 1: only read on acceptance
+    sp = SamplingParams(temperature=1.0, seed=0)
+    p = warp_probs(t_logits, sp)
+    N, V = 4000, t_logits.size
+    crit = 20.515  # chi2 critical value, df = V - 1 = 5, alpha = 0.001
+
+    counts = np.zeros(V)
+    for s in range(N):
+        rng_for = lambda pos, kind, s=s: np.random.default_rng(
+            (11, s, pos, kind))
+        d, q = draft_token(q_logits, sp, rng_for(0, KIND_DRAFT))
+        emitted, _ = spec_window([d], np.stack([t_logits, bonus]), sp,
+                                 rng_for, base_pos=0, q_probs=[q])
+        counts[emitted[0]] += 1
+    chi2 = float(((counts - N * p) ** 2 / (N * p)).sum())
+    assert chi2 < crit, (chi2, counts)
+
+    counts = np.zeros(V)
+    d = int(np.argmax(q_logits))  # greedy draft under a sampled target
+    for s in range(N):
+        rng_for = lambda pos, kind, s=s: np.random.default_rng(
+            (13, s, pos, kind))
+        emitted, _ = spec_window([d], np.stack([t_logits, bonus]), sp,
+                                 rng_for, base_pos=0, q_probs=[None])
+        counts[emitted[0]] += 1
+    chi2 = float(((counts - N * p) ** 2 / (N * p)).sum())
+    assert chi2 < crit, (chi2, counts)
+
+
+def test_spec_zero_extra_blocks_under_pressure(glm4):
+    """Speculation allocates from the SAME pool the target owns: after
+    every step no block is double-owned, conservation holds, and no row
+    ever covers more cache than its request's own total_len — i.e. zero
+    KV allocation attributable to the draft.  The pool is scarce enough
+    to force preemption WITH speculation on, and the greedy streams must
+    still match an ample-pool non-spec run (preempt-replay under spec)."""
+    cfg, model, sparams, fns = glm4
+    prompts = [_prompt(cfg, 4, seed=s) for s in range(4)]
+    gens = [10] * 4
+    want, _ = _run(model, sparams, prompts, gens, cache="paged", num_slots=4,
+                   max_len=16, block_size=4, prefill_chunk=4, **fns)
+    eng = ServeEngine(model, sparams, num_slots=4, max_len=16, cache="paged",
+                      block_size=4, num_blocks=9, prefill_chunk=4,
+                      spec=SpecConfig(k=3, draft_bits=2), **fns)
+    rids = [eng.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    pool = eng.pool
+    while eng.scheduler.has_work():
+        eng.step()
+        owned = [b for s in pool._seq_blocks.values() for b in s]
+        assert len(owned) == len(set(owned))               # no double-alloc
+        assert len(owned) + pool.num_free_blocks == pool.num_blocks - 1
+        for slot, seq in eng.scheduler.running.items():
+            assert len(pool._seq_blocks[slot]) <= pool.blocks_needed(
+                seq.request.total_len())                   # draft adds zero
+    assert [eng.output(r) for r in rids] == want
+    assert eng.metrics()["preemptions"] > 0                # pressure was real
+    assert pool.num_free_blocks == pool.num_blocks - 1     # no leak
+
+
+def test_spec_sampled_stream_batch_invariant(glm4):
+    """Per-request PRNG streams fold (seed, request id, position, kind):
+    a sampled request's token stream must not depend on batch composition
+    — in plain decode AND in speculative mode, where the same position
+    can be resolved by different windowings."""
+    from repro.serve.request import SamplingParams
+
+    cfg, model, sparams, fns = glm4
+    ver = make_verify_chunk(model, donate=False)
+    sp = SamplingParams(temperature=1.0, top_p=0.9, seed=7)
+
+    def run(companion, spec):
+        kw = dict(fns)
+        if spec is not None:
+            kw["verify_fn"] = ver
+        eng = ServeEngine(model, sparams, num_slots=3, max_len=24,
+                          cache="paged", block_size=4, prefill_chunk=4,
+                          spec=spec, **kw)
+        rid = eng.submit(_prompt(cfg, 5, seed=1), max_new_tokens=6,
+                         sampling=sp)
+        if companion:
+            eng.submit(_prompt(cfg, 3, seed=2), max_new_tokens=8,
+                       sampling=SamplingParams(temperature=0.8, seed=99))
+        eng.run_until_drained()
+        return eng.output(rid)
+
+    assert run(False, None) == run(True, None)
+    spec_cfg = SpecConfig(k=3, draft_bits=2)
+    assert run(False, spec_cfg) == run(True, spec_cfg)
+
+
+def test_spec_executables_one_verify_two_decode(glm4):
+    """A speculative engine compiles exactly ONE verify executable (fixed
+    C = k + 1 width, short windows pad) and exactly TWO decode entries
+    under the one jit wrapper — target bits + draft bits, keyed by the
+    Packed leaves' static bit counts."""
+    cfg, model, sparams, _ = glm4
+    decode_fn = make_decode_step(model, donate=False)
+    verify_fn = make_verify_chunk(model, donate=False)
+    prompts = [_prompt(cfg, n, seed=n) for n in (3, 5, 7)]
+    _run(model, sparams, prompts, [5, 4, 6], cache="paged", block_size=4,
+         prefill_chunk=4, decode_fn=decode_fn, verify_fn=verify_fn,
+         spec=SpecConfig(k=3, draft_bits=2))
+    assert verify_fn._cache_size() == 1
+    assert decode_fn._cache_size() == 2
 
 
 # --------------------------------------------------------------- sampling

@@ -1,0 +1,316 @@
+"""repro.spec unit tests: SpecConfig validation, repack_weight low-bit
+views, low_bit_view group walking (frozen groups shared by reference),
+snap_params_to_grid losslessness, DraftSelector archive picks, the
+rejection-sampler window resolution, per-request PRNG streams, and
+engine-level EOS-mid-window emission.  (Engine parity + distribution
+exactness gates live in tests/test_serve_paged.py.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune.archive import ParetoArchive
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.pack import Packed, dequant_packed, pack_weight, repack_weight
+from repro.quant.qat import get_by_path, policy_for
+from repro.serve import ServeEngine
+from repro.serve.request import Request, SamplingParams
+from repro.spec import (
+    DraftSelector,
+    SpecConfig,
+    low_bit_view,
+    snap_params_to_grid,
+    spec_window,
+)
+from repro.train.serve import quantize_for_serving
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def glm4():
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    sparams = quantize_for_serving(model, params, policy_for(model, 4))
+    return cfg, model, params, sparams
+
+
+# ---------------------------------------------------------------- config
+def test_spec_config_validation():
+    assert SpecConfig(k=2, draft_bits=2).k == 2
+    with pytest.raises(ValueError):
+        SpecConfig(k=0, draft_bits=2)
+    with pytest.raises(ValueError):
+        SpecConfig(k=4)  # no draft source at all
+    with pytest.raises(ValueError):
+        SpecConfig(k=4, draft_bits=9)
+    with pytest.raises(ValueError):
+        SpecConfig(k=4, draft_bits=1)
+
+
+def test_spec_requires_paged_cache(glm4):
+    cfg, model, params, sparams = glm4
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, sparams, num_slots=2, max_len=16, cache="slot",
+                    spec=SpecConfig(k=2, draft_bits=2))
+
+
+# ---------------------------------------------------------------- repack
+def test_repack_weight_matches_direct_pack():
+    """Re-packing an 8-bit Packed at 2 bits must equal packing the 8-bit
+    DEQUANTIZED weights at 2 bits directly — the draft sees exactly the
+    low-bit projection of what the target serves."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 24), jnp.float32)
+    planes8, scale8 = pack_weight(w, 8)
+    p8 = Packed(planes8, scale8, 8)
+    p2 = repack_weight(p8, 2)
+    assert p2.bits == 2 and p2.planes.shape[0] == 2
+    w8 = dequant_packed(planes8, scale8, 8)
+    planes2, scale2 = pack_weight(w8, 2)
+    np.testing.assert_allclose(
+        np.asarray(dequant_packed(p2.planes, p2.scale, 2)),
+        np.asarray(dequant_packed(planes2, scale2, 2)), rtol=0, atol=0)
+
+
+def test_repack_weight_noop_at_equal_or_wider():
+    """Never "up-quantize": bits >= current returns the input unchanged."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 8), jnp.float32)
+    planes, scale = pack_weight(w, 4)
+    p4 = Packed(planes, scale, 4)
+    assert repack_weight(p4, 4) is p4
+    assert repack_weight(p4, 8) is p4
+
+
+def test_repack_weight_expert_bank():
+    """Expert banks (leading E axis on the planes) re-pack per expert."""
+    bank = jax.random.normal(jax.random.PRNGKey(3), (3, 16, 8), jnp.float32)
+    planes = jnp.stack([pack_weight(bank[e], 8)[0] for e in range(3)])
+    scale = jnp.stack([pack_weight(bank[e], 8)[1] for e in range(3)])
+    p2 = repack_weight(Packed(planes, scale, 8), 2)
+    assert p2.planes.shape == (3, 2, 2, 8)  # (E, bits, K//8, N)
+    for e in range(3):
+        w8 = dequant_packed(planes[e], scale[e], 8)
+        pl, sc = pack_weight(w8, 2)
+        np.testing.assert_allclose(
+            np.asarray(dequant_packed(p2.planes[e], p2.scale[e], 2)),
+            np.asarray(dequant_packed(pl, sc, 2)))
+
+
+# ----------------------------------------------------------- low_bit_view
+def test_low_bit_view_repacks_searchable_keeps_frozen(glm4):
+    """The draft view re-packs every searchable Packed leaf at the draft
+    bits but shares frozen-at-8 groups (lm_head) BY REFERENCE — those are
+    bit-identical between draft and target, which is what lets them agree
+    on the readout.  The target's sparams are never mutated."""
+    cfg, model, params, sparams = glm4
+    frozen = model.frozen_bits()
+    draft = low_bit_view(model, sparams, bits=2)
+    checked_searchable = checked_frozen = 0
+    for g in model.quant_groups():
+        if g.path == ("lm_head",):
+            assert draft["lm_head"] is sparams["lm_head"]
+            checked_frozen += 1
+            continue
+        if g.path[0] != "blocks":
+            continue
+        blocks_d, blocks_t = draft["blocks"], sparams["blocks"]
+        if isinstance(blocks_t[0], list):
+            leaf_d = get_by_path(blocks_d[g.path[1]][g.layer], g.path[2:])
+            leaf_t = get_by_path(blocks_t[g.path[1]][g.layer], g.path[2:])
+        else:
+            leaf_d = get_by_path(blocks_d[g.layer], g.path[1:])
+            leaf_t = get_by_path(blocks_t[g.layer], g.path[1:])
+        if not isinstance(leaf_t, Packed):
+            continue
+        if g.name in frozen:
+            assert leaf_d is leaf_t
+            checked_frozen += 1
+        else:
+            assert leaf_d.bits == 2
+            assert leaf_t.bits == 4  # target untouched
+            checked_searchable += 1
+    assert checked_searchable > 0 and checked_frozen > 0
+
+
+def test_low_bit_view_needs_a_policy(glm4):
+    cfg, model, params, sparams = glm4
+    with pytest.raises(ValueError):
+        low_bit_view(model, sparams)
+
+
+# ------------------------------------------------------------- grid snap
+def test_snap_params_to_grid_makes_low_bit_pack_lossless(glm4):
+    """After snapping to the 2-bit grid, pack->dequant at 2 bits
+    reconstructs searchable weights exactly — so an 8-bit target and its
+    2-bit re-pack agree everywhere (acceptance ~ 1, the regime the spec
+    benchmark measures its mechanical speedup ceiling in)."""
+    cfg, model, params, _ = glm4
+    snapped = snap_params_to_grid(model, params, 2)
+    frozen = model.frozen_bits()
+    checked = 0
+    for g in model.quant_groups():
+        if g.name in frozen:
+            continue
+        w = np.asarray(get_by_path(snapped, g.path), np.float32)
+        # stacked layouts snap each trailing-2D slice with its own scales
+        for mat in w.reshape(-1, *w.shape[-2:]):
+            pl, sc = pack_weight(jnp.asarray(mat), 2)
+            np.testing.assert_allclose(
+                np.asarray(dequant_packed(pl, sc, 2)), mat, atol=1e-6)
+        checked += 1
+        if checked >= 3:  # a few groups suffice; the property is per-leaf
+            break
+    assert checked > 0
+
+
+# ---------------------------------------------------------- DraftSelector
+def _archive():
+    arc = ParetoArchive(objectives=("acc", "sq"))
+    assert arc.add({"a": 8, "b": 8}, acc=0.99, sq=0.5)
+    assert arc.add({"a": 2, "b": 4}, acc=0.97, sq=0.2)
+    assert arc.add({"a": 2, "b": 2}, acc=0.90, sq=0.1)
+    return arc
+
+
+def test_draft_selector_picks_cheapest_above_floor():
+    arc = _archive()
+    sel = DraftSelector(acc_floor=0.95)
+    assert {tuple(sorted(e.bits_dict().items()))
+            for e in sel.candidates(arc)} == {
+        (("a", 8), ("b", 8)), (("a", 2), ("b", 4))}
+    assert sel.select(arc).bits_dict() == {"a": 2, "b": 4}  # cheapest
+
+
+def test_draft_selector_max_avg_bits_and_empty():
+    arc = _archive()
+    assert DraftSelector(acc_floor=0.95, max_avg_bits=4.0).select(
+        arc).bits_dict() == {"a": 2, "b": 4}
+    assert DraftSelector(acc_floor=0.999).select(arc) is None
+    assert DraftSelector(acc_floor=0.95, max_avg_bits=2.5).select(arc) is None
+
+
+def test_draft_selector_policy_roundtrip(glm4):
+    """Archive entry -> QuantPolicy aligned with the model's groups, fed
+    straight into SpecConfig(draft_policy=...)."""
+    cfg, model, params, sparams = glm4
+    base = policy_for(model, 3)
+    bits = {g.name: base.get(g.name) for g in model.quant_groups()}
+    arc = ParetoArchive(objectives=("acc", "sq"))
+    arc.add(bits, acc=0.99, sq=0.1)
+    pol = DraftSelector(acc_floor=0.5).policy(model, arc)
+    assert pol is not None
+    frozen = model.frozen_bits()
+    for g in model.quant_groups():
+        assert pol.get(g.name) == (frozen.get(g.name, 3))
+    # and it actually drives low_bit_view
+    draft = low_bit_view(model, sparams, policy=pol)
+    assert draft["lm_head"] is sparams["lm_head"]
+
+
+# ----------------------------------------------------------- spec_window
+def _rng_for(pos, kind):
+    return np.random.default_rng((5, pos, kind))
+
+
+def test_spec_window_greedy_identity():
+    """Greedy resolution: accept while the draft matches the target
+    argmax, emit the argmax at the first disagreement — never more."""
+    V = 8
+    rows = np.zeros((4, V))
+    rows[0, 3] = rows[1, 5] = rows[2, 1] = rows[3, 6] = 10.0
+    sp = SamplingParams()  # temperature 0 -> greedy
+    emitted, acc = spec_window([3, 5, 2], rows, sp, _rng_for, base_pos=0)
+    assert emitted == [3, 5, 1] and acc == 2  # mismatch at j=2 -> argmax
+    emitted, acc = spec_window([3, 5, 1], rows, sp, _rng_for, base_pos=0)
+    assert emitted == [3, 5, 1, 6] and acc == 3  # full accept -> bonus row
+
+
+def test_spec_window_k0_degenerates_to_plain_decode():
+    logits = np.zeros((1, 5))
+    logits[0, 2] = 4.0
+    emitted, acc = spec_window([], logits, SamplingParams(), _rng_for,
+                               base_pos=0)
+    assert emitted == [2] and acc == 0
+
+
+def test_spec_window_bonus_uses_plain_decode_stream():
+    """On full acceptance the bonus draw must come from the SAME stream
+    plain decode would use at that position (KIND_TOKEN at base_pos + k)
+    — this is what makes speculative sampling invariant to windowing."""
+    V = 6
+    rows = np.zeros((2, V))
+    rows[0, 1] = 10.0  # near-deterministic acceptance of draft token 1
+    rows[1] = np.asarray([0.5, -0.2, 1.0, 0.1, -1.0, 0.3])
+    sp = SamplingParams(temperature=1.0, seed=0)
+    q = np.zeros(V)
+    q[1] = 1.0
+    emitted, acc = spec_window([1], rows, sp, _rng_for, base_pos=4,
+                               q_probs=[q])
+    assert acc == 1
+    from repro.serve.request import warp_probs
+    from repro.spec import KIND_TOKEN
+
+    p = warp_probs(rows[1], sp)
+    want = int(_rng_for(5, KIND_TOKEN).choice(V, p=p))
+    assert emitted == [1, want]
+
+
+# ------------------------------------------------------------ PRNG streams
+def test_request_rng_streams_deterministic_and_distinct():
+    req = Request(3, np.arange(4), 8,
+                  SamplingParams(temperature=1.0, seed=42))
+    a = req.rng_for(2, 1).random(4)
+    b = req.rng_for(2, 1).random(4)
+    np.testing.assert_array_equal(a, b)          # reproducible stream
+    assert not np.allclose(a, req.rng_for(2, 2).random(4))  # kind-keyed
+    assert not np.allclose(a, req.rng_for(3, 1).random(4))  # position-keyed
+    other = Request(4, np.arange(4), 8,
+                    SamplingParams(temperature=1.0, seed=42))
+    assert not np.allclose(a, other.rng_for(2, 1).random(4))  # id-keyed
+
+
+# ---------------------------------------------------------- engine window
+def test_spec_eos_and_budget_mid_window(glm4):
+    """EOS landing INSIDE a speculative window truncates the stream at
+    exactly the non-spec point; tokens past it in the same window are
+    dropped, the row retires, and the pool fully drains."""
+    cfg, model, params, sparams = glm4
+    base = ServeEngine(model, sparams, num_slots=1, max_len=24,
+                       cache="paged", block_size=4, prefill_chunk=4)
+    rid = base.submit(_prompt_of(cfg, 4, 1), max_new_tokens=10)
+    base.run_until_drained()
+    stream = base.output(rid)
+    eos = stream[2]  # make the third emitted token the EOS
+    eng = ServeEngine(model, sparams, num_slots=1, max_len=24,
+                      cache="paged", block_size=4, prefill_chunk=4,
+                      spec=SpecConfig(k=4, draft_bits=2))
+    r2 = eng.submit(_prompt_of(cfg, 4, 1), max_new_tokens=10, eos_id=eos)
+    eng.run_until_drained()
+    assert eng.output(r2) == stream[:3]
+    assert eng.pool.num_free == eng.pool.num_slots
+    assert eng.pool.num_free_blocks == eng.pool.num_blocks - 1
+
+
+# ---------------------------------------------------------- draftability
+def test_draftability_evaluator_measures_and_memoizes(glm4):
+    """DraftabilityEvaluator times real spec engine steps (candidate as
+    draft, fixed 8-bit target) and memoizes per distinct candidate."""
+    from repro.autotune.workers import DraftabilityEvaluator
+
+    cfg, model, params, _ = glm4
+    ev = DraftabilityEvaluator(model, params, k=2, num_slots=2,
+                               decode_steps=2, warmup_steps=1)
+    bits = {n: 2 for n in ev.group_names}
+    lat, ref = ev(bits)
+    assert lat > 0.0 and ref > 0.0
+    calls = []
+    orig, ev._measure = ev._measure, lambda b: calls.append(1) or orig(b)
+    assert ev(bits) == (lat, ref)
+    assert not calls  # both the candidate and the 8-bit ref were cached
+
+
+def _prompt_of(cfg, n, seed):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,), 0,
+                                         cfg.vocab_size))
