@@ -174,15 +174,33 @@ class EngineLatencyEvaluator(_LatencyBase):
     another timing) on the shared device.  A ``thread_safe=True``
     accuracy evaluator opts out of that lock — only pair it with this
     evaluator when accuracy work runs on *different* devices, or the
-    memoized first measurement will bake in their contention."""
+    memoized first measurement will bake in their contention.
+
+    ``kv_quant=True`` extends the candidate space with the model's
+    per-layer KV-cache groups (``model.kv_quant_groups()``): any
+    ``kv.L..`` keys in ``bits_by_name`` become the engine's per-layer
+    ``kv_bits`` list, so the HAQ-style KV action is priced by the same
+    wall-clock measurement as the weight bits.  The 8-bit reference then
+    runs with an int8 KV pool (uniform ``kv.* = 8``), making the ratio a
+    pure like-for-like bitwidth effect."""
 
     def __init__(self, model, params, *, num_slots: int = 2,
                  prompt_len: int = 4, decode_steps: int = 8,
                  warmup_steps: int = 2, cache: str = "paged",
                  block_size: int = 8, prefill_chunk: int = 8,
-                 vocab: int | None = None, seed: int = 0):
+                 vocab: int | None = None, seed: int = 0,
+                 kv_quant: bool = False):
         groups = model.quant_groups()
-        super().__init__((g.name for g in groups), model.frozen_bits())
+        names = [g.name for g in groups]
+        self.weight_group_names = tuple(names)
+        self.kv_group_names: tuple = ()
+        if kv_quant:
+            if cache != "paged":
+                raise ValueError("kv_quant requires cache='paged'")
+            self.kv_group_names = tuple(
+                g.name for g in model.kv_quant_groups())
+            names += list(self.kv_group_names)
+        super().__init__(names, model.frozen_bits())
         self.model, self.params = model, params
         self.num_slots = num_slots
         self.prompt_len = prompt_len
@@ -202,12 +220,21 @@ class EngineLatencyEvaluator(_LatencyBase):
         from repro.serve import ServeEngine
 
         policy = QuantPolicy.from_array(
-            self.group_names, [bits_by_name[n] for n in self.group_names])
+            self.weight_group_names,
+            [bits_by_name.get(n, 8) for n in self.weight_group_names])
+        # "kv."-prefixed groups are serving-cache state, not weights: they
+        # route to the pool's per-layer kv_bits knob, not the pack policy
+        kv_kw = {}
+        kv_named = {n: int(bits_by_name[n]) for n in self.kv_group_names
+                    if n in bits_by_name}
+        if kv_named:
+            kv_kw["kv_bits"] = [kv_named.get(n, 8)
+                                for n in self.kv_group_names]
         gen = self.warmup_steps + self.decode_steps + 2
         max_len = self.prompt_len + gen + 1
         engine = ServeEngine.from_params(
             self.model, self.params, policy, num_slots=self.num_slots,
-            max_len=max_len, **self.engine_kw)
+            max_len=max_len, **self.engine_kw, **kv_kw)
         rng = np.random.default_rng(self.seed)
         for _ in range(self.num_slots):
             engine.submit(rng.integers(0, self.vocab, self.prompt_len), gen)

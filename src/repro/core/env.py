@@ -53,10 +53,18 @@ class QuantEnv:
     reward_kwargs: dict = field(default_factory=dict)
     eval_mode: str = "per_step"       # per_step | episode_end (deep nets)
     init_bits: int = 8                # paper: all layers start at 8 bits
+    # HAQ-style extension: per-layer KV-cache bitwidth pseudo-groups
+    # (``model.kv_quant_groups()``, names ``kv.L..``) appended after the
+    # weight walk — the agent picks serving KV precision with the same
+    # flexible action set, and SQ prices the cache bytes through the
+    # groups' n_weights (n_macs = 0: bits buy bandwidth, not precision)
+    kv_groups: list = field(default_factory=list)
 
     def __post_init__(self):
         if self.eval_mode not in ("per_step", "episode_end", "deferred"):
             raise ValueError(f"eval_mode={self.eval_mode!r}")
+        if self.kv_groups:
+            self.groups = list(self.groups) + list(self.kv_groups)
         self.searchable = [g for g in self.groups if g.name not in self.frozen]
         self.T = len(self.searchable)
         self._logw = {g.name: np.log(max(g.n_weights, 1)) for g in self.groups}

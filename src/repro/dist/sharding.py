@@ -222,6 +222,8 @@ def cache_specs(cache, mesh):
         if nd == 0 or key == "block_tables":
             return P()
         ax = cache_batch_axis(key)
+        if ax < 0:  # no per-sequence axis (kv_qmax): replicate
+            return P()
         s = [None] * nd
         s[ax] = _fit(leaf.shape[ax], daxes, sizes)
         return P(*s)

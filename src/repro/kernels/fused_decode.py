@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: fused bit-serial QKV projection + quantized paged
+decode attention — one kernel, zero dequantized HBM round-trips.
+
+The unfused decode step materializes three dequantized activation tensors
+(q/k/v) plus a dequantized KV gather in HBM between four kernels.  This
+kernel keeps the whole token step on-chip:
+
+  grid (B, nb), scalar-prefetched block table + lengths (same trick as
+  ``paged_attention.py`` — the block table IS the BlockSpec index map):
+
+  j == 0      bit-serial q/k/v projections straight off the packed uint8
+              bitplanes (``qmm.py`` bitserial math: ``x @ W = (Σ_b 2^b
+              (x @ plane_b) − n·Σx) / n · scale``), RoPE from prefetched
+              cos/sin rows, then the new token's K/V quantized in-VMEM
+              (``quant.pack.kv_quantize`` numerics) and emitted as code +
+              scale outputs — the *caller* scatters them into the pool,
+              so the kernel has no aliased in-place operands.
+  every j     one physical KV block DMA'd in, dequantized in VMEM
+              (codes·scale), folded into an online-softmax accumulator.
+  j == nb-1   the new token's (dequantized) K/V folded in from scratch —
+              numerically identical to write-then-attend — and the
+              normalized output written.
+
+Weight planes ride in whole (index map pinned to block 0, so Mosaic DMAs
+them once per row, not once per block step); ``ops.fused_qkv_paged_decode``
+gates the fused path on the packed planes fitting a VMEM budget and falls
+back to the unfused pipeline otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.qmm import _unpack_tile
+from repro.quant.pack import kv_pack_int4, kv_quantize, kv_unpack_int4
+
+_NEG = -1e30
+
+
+def _bitserial_row(x, planes, scale, bits: int):
+    """(1, D) f32 @ packed (bits, D//8, N) -> (1, N) f32."""
+    n_lvl = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    pl_all = _unpack_tile(planes, bits).astype(jnp.float32)  # (bits, D, N)
+    acc = jnp.zeros((1, pl_all.shape[-1]), jnp.float32)
+    for b in range(bits):  # static unroll: one binary matmul per plane
+        acc += float(1 << b) * jnp.dot(x, pl_all[b],
+                                       preferred_element_type=jnp.float32)
+    off = n_lvl * jnp.sum(x, axis=-1, keepdims=True)
+    return (acc - off) / n_lvl * scale
+
+
+def _rope_row(x, cos, sin):
+    """x (KV, G?, hd) f32; cos/sin (hd//2,) for this row's position."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _fused_kernel(bt_ref, len_ref, x_ref, qp_ref, qs_ref, kp_ref, ks_ref,
+                  vp_ref, vs_ref, k_ref, v_ref, ksc_ref, vsc_ref, cos_ref,
+                  sin_ref, qmax_ref,
+                  o_ref, kc_out, vc_out, ksc_out, vsc_out,
+                  m_ref, l_ref, acc_ref, q_s, kn_s, vn_s, *,
+                  bs: int, H: int, KV: int, hd: int, bits_q: int,
+                  bits_k: int, bits_v: int, packed4: bool, act_dtype):
+    b, j = pl.program_id(0), pl.program_id(1)
+    nb = pl.num_programs(1)
+    G = H // KV
+    scale = hd ** -0.5
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        x = x_ref[...].astype(jnp.float32)                    # (1, D)
+        qmax = qmax_ref[0, 0]
+        cos, sin = cos_ref[0], sin_ref[0]                     # (hd//2,)
+        # projections off the packed planes; mirror apply_linear's cast to
+        # the activation dtype before RoPE (parity with the unfused path)
+        q = _bitserial_row(x, qp_ref[...], qs_ref[...], bits_q)
+        q = q.astype(act_dtype).astype(jnp.float32).reshape(KV, G, hd)
+        k = _bitserial_row(x, kp_ref[...], ks_ref[...], bits_k)
+        k = k.astype(act_dtype).astype(jnp.float32).reshape(KV, hd)
+        v = _bitserial_row(x, vp_ref[...], vs_ref[...], bits_v)
+        v = v.astype(act_dtype).astype(jnp.float32).reshape(KV, hd)
+        # apply_rope returns in the activation dtype — mirror the round-trip
+        q_s[...] = _rope_row(q, cos, sin).astype(act_dtype).astype(jnp.float32)
+        k = _rope_row(k, cos, sin).astype(act_dtype).astype(jnp.float32)
+        k_codes, k_sc = kv_quantize(k, qmax)                  # (KV, hd), (KV,)
+        v_codes, v_sc = kv_quantize(v, qmax)
+        kn_s[...] = k_codes.astype(jnp.float32) * k_sc[:, None]
+        vn_s[...] = v_codes.astype(jnp.float32) * v_sc[:, None]
+        if packed4:
+            k_codes, v_codes = kv_pack_int4(k_codes), kv_pack_int4(v_codes)
+        kc_out[0] = k_codes.astype(kc_out.dtype)
+        vc_out[0] = v_codes.astype(vc_out.dtype)
+        ksc_out[0] = k_sc
+        vsc_out[0] = v_sc
+
+    kc, vc = k_ref[0], v_ref[0]                               # (bs, KV, hd[/2])
+    if packed4:
+        kc, vc = kv_unpack_int4(kc), kv_unpack_int4(vc)
+    k_blk = kc.astype(jnp.float32) * ksc_ref[0][..., None]
+    v_blk = vc.astype(jnp.float32) * vsc_ref[0][..., None]
+    q = q_s[...]
+    s = jnp.einsum("kgh,tkh->kgt", q, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    mask = pos < len_ref[b]                                   # pre-write length
+    s = jnp.where(mask, s, _NEG)
+    m_old, l_old = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_old - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_old * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "kgt,tkh->kgh", p, v_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _():
+        # fold the new token in from scratch — write-then-attend semantics
+        q = q_s[...]
+        s_new = jnp.einsum("kgh,kh->kg", q, kn_s[...],
+                           preferred_element_type=jnp.float32) * scale
+        m_old, l_old = m_ref[...], l_ref[...]
+        m_fin = jnp.maximum(m_old, s_new)
+        p_new = jnp.exp(s_new - m_fin)
+        corr = jnp.exp(m_old - m_fin)
+        l_fin = l_old * corr + p_new                           # > 0 always
+        acc = acc_ref[...] * corr[..., None] + p_new[..., None] * vn_s[...][:, None, :]
+        o_ref[0] = (acc / jnp.maximum(l_fin[..., None], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits_q", "bits_k", "bits_v", "num_heads", "interpret"))
+def fused_qkv_paged_decode_pallas(
+    x: jax.Array,             # (B, D) post-norm hidden, one token per row
+    wq_planes, wq_scale,      # (bits_q, D//8, H*hd) u8, (1, H*hd) f32
+    wk_planes, wk_scale,      # (bits_k, D//8, KV*hd)
+    wv_planes, wv_scale,      # (bits_v, D//8, KV*hd)
+    k_pool, v_pool,           # (NB, bs, KV, hd) int8 | (NB, bs, KV, hd//2) u8
+    k_scale, v_scale,         # (NB, bs, KV) f32
+    block_tables, lengths,    # (B, nb) i32, (B,) i32 — PRE-write lengths
+    cos, sin,                 # (B, hd//2) f32 RoPE rows at position lengths[b]
+    qmax,                     # scalar f32 — this layer's KV code ceiling
+    *,
+    bits_q: int, bits_k: int, bits_v: int, num_heads: int,
+    interpret: bool = False,
+):
+    """Returns ``(attn (B, KV, G, hd) f32, k_codes (B, KV, hd_s),
+    v_codes, k_sc (B, KV) f32, v_sc (B, KV) f32)``."""
+    B, D = x.shape
+    H = num_heads
+    NB, bs, KV, hds = k_pool.shape
+    packed4 = k_pool.dtype == jnp.uint8
+    hd = hds * 2 if packed4 else hds
+    G = H // KV
+    nb = block_tables.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, j, bt, ln: (b, 0)),
+            pl.BlockSpec((bits_q, D // 8, H * hd),
+                         lambda b, j, bt, ln: (0, 0, 0)),
+            pl.BlockSpec((1, H * hd), lambda b, j, bt, ln: (0, 0)),
+            pl.BlockSpec((bits_k, D // 8, KV * hd),
+                         lambda b, j, bt, ln: (0, 0, 0)),
+            pl.BlockSpec((1, KV * hd), lambda b, j, bt, ln: (0, 0)),
+            pl.BlockSpec((bits_v, D // 8, KV * hd),
+                         lambda b, j, bt, ln: (0, 0, 0)),
+            pl.BlockSpec((1, KV * hd), lambda b, j, bt, ln: (0, 0)),
+            pl.BlockSpec((1, bs, KV, hds),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hds),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV), lambda b, j, bt, ln: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, KV), lambda b, j, bt, ln: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, hd // 2), lambda b, j, bt, ln: (b, 0)),
+            pl.BlockSpec((1, hd // 2), lambda b, j, bt, ln: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, hds), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, KV, hds), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, KV), lambda b, j, bt, ln: (b, 0)),
+            pl.BlockSpec((1, KV), lambda b, j, bt, ln: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),       # running max
+            pltpu.VMEM((KV, G), jnp.float32),       # running denom
+            pltpu.VMEM((KV, G, hd), jnp.float32),   # weighted-V accumulator
+            pltpu.VMEM((KV, G, hd), jnp.float32),   # roped q (lives the row)
+            pltpu.VMEM((KV, hd), jnp.float32),      # new-token K (dequantized)
+            pltpu.VMEM((KV, hd), jnp.float32),      # new-token V (dequantized)
+        ],
+    )
+    kernel = functools.partial(
+        _fused_kernel, bs=bs, H=H, KV=KV, hd=hd, bits_q=bits_q,
+        bits_k=bits_k, bits_v=bits_v, packed4=packed4, act_dtype=x.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, hds), k_pool.dtype),
+            jax.ShapeDtypeStruct((B, KV, hds), v_pool.dtype),
+            jax.ShapeDtypeStruct((B, KV), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV), jnp.float32),
+        ],
+        interpret=interpret,
+        name=f"fused_qkv_paged_decode_{'int4' if packed4 else 'int8'}",
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      x, wq_planes, wq_scale.astype(jnp.float32),
+      wk_planes, wk_scale.astype(jnp.float32),
+      wv_planes, wv_scale.astype(jnp.float32),
+      k_pool, v_pool, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), cos.astype(jnp.float32),
+      sin.astype(jnp.float32),
+      jnp.asarray(qmax, jnp.float32).reshape(1, 1))

@@ -1,10 +1,11 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Dispatch policy (``REPRO_PALLAS`` env var):
-- ``auto`` (default): compiled Pallas on TPU, interpret-mode Pallas on CPU
-  for any array small enough to test, pure-jnp ref otherwise.  Interpret
-  mode executes the kernel body in Python per grid step — correct but slow —
-  so the auto path caps interpreted problem sizes.
+- ``auto`` (default): compiled Pallas on TPU, pure-jnp ref off-TPU.
+  (Interpret mode executes the kernel body in Python per grid step —
+  correct but far slower than the jnp oracle, and inside a jit it unrolls
+  the whole grid into the XLA graph.  The serving hot loop runs in
+  ``auto``, so off-TPU it must take the fast oracle, never interpret.)
 - ``interpret``: force interpret mode (kernel tests use this).
 - ``ref``: force the pure-jnp oracle (what the CPU training loops use).
 - ``on``: force compiled Pallas (real TPU runs).
@@ -21,11 +22,16 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels.fake_quant import fake_quant_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.fused_decode import fused_qkv_paged_decode_pallas
+from repro.kernels.paged_attention import (paged_attention_pallas,
+                                           paged_attention_quant_pallas)
 from repro.kernels.qmm import qmm_pallas
 from repro.quant.wrpn import tensor_scale
 
 _INTERPRET_ELEM_CAP = 1 << 22  # don't interpret-execute tiles beyond ~4M elems
+# fused decode keeps all three packed projection weights resident in VMEM;
+# past this budget fall back to the unfused pipeline (qmm + paged attention)
+_FUSED_VMEM_CAP = 8 << 20
 
 
 def _mode() -> str:
@@ -56,9 +62,9 @@ def fake_quant(w: jax.Array, bits, scale=None) -> jax.Array:
         scale = tensor_scale(w)
     scale = jnp.asarray(scale, jnp.float32).reshape(())
     mode = _mode()
-    if mode == "ref" or (mode == "auto" and not _on_tpu() and w.size > _INTERPRET_ELEM_CAP):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
         return kref.fake_quant_ref(w, bits, scale)
-    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    interpret = mode == "interpret"
     shape = w.shape
     w2 = w.reshape(-1, shape[-1]) if w.ndim != 2 else w
     M, N = w2.shape
@@ -71,31 +77,94 @@ def fake_quant(w: jax.Array, bits, scale=None) -> jax.Array:
 
 def paged_attention(
     q: jax.Array,             # (B, 1, H, hd) — one new token per sequence
-    k_pool: jax.Array,        # (NB, bs, KV, hd) — one layer's paged blocks
-    v_pool: jax.Array,        # (NB, bs, KV, hd)
+    k_pool: jax.Array,        # (NB, bs, KV, hd[/2]) — one layer's paged blocks
+    v_pool: jax.Array,        # same container as k_pool
     block_tables: jax.Array,  # (B, nb) int32
     lengths: jax.Array,       # (B,) int32 effective lengths
+    k_scale: jax.Array | None = None,  # (NB, bs, KV) f32 — quantized pools
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Decode attention over a paged KV pool -> (B, 1, H, hd).
 
     Pallas path DMAs each live block once (no gather materialization);
     ref path gathers pages then runs the identical decode_attention math.
+    Passing ``k_scale``/``v_scale`` selects the quantized-block path
+    (int8 codes, or nibble-packed uint8 at uniform int4): blocks are
+    dequantized in VMEM / post-gather, never re-materialized in HBM.
     """
     B, _, H, hd = q.shape
     KV = k_pool.shape[2]
     G = H // KV
     mode = _mode()
-    work = B * block_tables.shape[1] * k_pool.shape[1] * H * hd
-    if mode == "ref" or (mode == "auto" and not _on_tpu()
-                         and work > _INTERPRET_ELEM_CAP):
-        out = kref.paged_attention_ref(q, k_pool, v_pool, block_tables,
-                                       lengths)
+    quantized = k_scale is not None
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        if quantized:
+            out = kref.quant_paged_attention_ref(
+                q, k_pool, v_pool, k_scale, v_scale, block_tables, lengths)
+        else:
+            out = kref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                           lengths)
         return out.astype(q.dtype)
-    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
-    out = paged_attention_pallas(
-        q.reshape(B, KV, G, hd), k_pool, v_pool, block_tables, lengths,
-        interpret=interpret)
+    interpret = mode == "interpret"
+    if quantized:
+        out = paged_attention_quant_pallas(
+            q.reshape(B, KV, G, hd), k_pool, v_pool, k_scale, v_scale,
+            block_tables, lengths, interpret=interpret)
+    else:
+        out = paged_attention_pallas(
+            q.reshape(B, KV, G, hd), k_pool, v_pool, block_tables, lengths,
+            interpret=interpret)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def fused_qkv_paged_decode(
+    x: jax.Array,             # (B, D) post-norm hidden, one token per row
+    wq, wk, wv,               # quant.pack.Packed projection weights
+    k_pool, v_pool,           # quantized paged blocks (pre-write)
+    k_scale, v_scale,         # (NB, bs, KV) f32
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32 — lengths BEFORE the new token
+    qmax,                     # scalar f32 — this layer's KV code ceiling
+    *,
+    rope_theta: float,
+    num_heads: int,
+    num_kv_heads: int,
+):
+    """Fused bit-serial QKV + RoPE + KV-quantize + paged attention.
+
+    Returns ``(attn (B, 1, H, hd) in x.dtype, k_codes, v_codes, k_sc,
+    v_sc)`` — codes/scales for the new token, which the caller scatters
+    into the pool (write-then-attend ≡ the kernel's attend-with-splice).
+
+    TPU path is ONE kernel (``kernels.fused_decode``) when the packed
+    planes fit the VMEM budget; otherwise, and off-TPU, the composed
+    oracle (bitwise the unfused qmm + rope + quantize + attend chain).
+    """
+    B, D = x.shape
+    H, KV = num_heads, num_kv_heads
+    packed4 = k_pool.dtype == jnp.uint8
+    hd = k_pool.shape[-1] * 2 if packed4 else k_pool.shape[-1]
+    mode = _mode()
+    w_bytes = sum(p.planes.size for p in (wq, wk, wv))
+    fits = w_bytes <= _FUSED_VMEM_CAP
+    if mode == "ref" or (mode == "auto" and not (_on_tpu() and fits)):
+        out, kc, vc, ks, vs = kref.fused_qkv_paged_decode_ref(
+            x, wq, wk, wv, k_pool, v_pool, k_scale, v_scale, block_tables,
+            lengths, qmax, rope_theta, H, KV)
+        return out.astype(x.dtype), kc, vc, ks, vs
+    interpret = mode == "interpret"
+    # RoPE rows for each sequence's write position (tiny: B × hd/2)
+    from repro.models.common import rope_freqs
+
+    inv = rope_freqs(hd, rope_theta)                          # (hd/2,)
+    ang = lengths.astype(jnp.float32)[:, None] * inv          # (B, hd/2)
+    out, kc, vc, ks, vs = fused_qkv_paged_decode_pallas(
+        x, wq.planes, wq.scale, wk.planes, wk.scale, wv.planes, wv.scale,
+        k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+        jnp.cos(ang), jnp.sin(ang), qmax,
+        bits_q=wq.bits, bits_k=wk.bits, bits_v=wv.bits, num_heads=H,
+        interpret=interpret)
+    return out.reshape(B, 1, H, hd).astype(x.dtype), kc, vc, ks, vs
 
 
 def qmm(
@@ -122,11 +191,10 @@ def qmm(
     if path == "auto":
         path = "bitserial" if M <= 32 else "dequant"
     mode = _mode()
-    work = M * K * N
-    if mode == "ref" or (mode == "auto" and not _on_tpu() and work > _INTERPRET_ELEM_CAP):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
         out = kref.qmm_ref(x2, packed, scale, bits)
         return out.astype(out_dtype).reshape(*batch, N)
-    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    interpret = mode == "interpret"
     # tile alignment: pick divisors, pad M (cheap) rather than K/N (packed)
     bm = _pick_block(M, 128, pad_ok=True)
     bn = _pick_block(N, 256)

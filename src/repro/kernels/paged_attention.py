@@ -13,6 +13,12 @@ live block is read once.
 
 Numerics match ``models.common.decode_attention`` (fp32 scores/softmax,
 finite -1e30 mask) — the paged-vs-slot parity contract.
+
+``paged_attention_quant_pallas`` is the same online-softmax sweep over
+*quantized* KV blocks (int8 codes, or nibble-packed uint8 at uniform
+int4) with per-(token, KV-head) scales: each DMA'd block is dequantized
+in VMEM — ``codes.f32 * scale`` — so HBM traffic shrinks by the code
+width (2-4x vs bf16) and the dequantized values never round-trip HBM.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.pack import kv_unpack_int4
 
 _NEG = -1e30
 
@@ -104,3 +112,101 @@ def paged_attention_pallas(
         name="paged_decode_attention",
     )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
       q, k_pool, v_pool)
+
+
+def _paged_attn_quant_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                             vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                             bs: int, scale: float, packed4: bool):
+    b, j = pl.program_id(0), pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (KV, G, hd)
+    kc, vc = k_ref[0], v_ref[0]                       # (bs, KV, hd[/2])
+    if packed4:
+        kc, vc = kv_unpack_int4(kc), kv_unpack_int4(vc)
+    # dequantize in VMEM: codes * per-(token, head) scale
+    k = kc.astype(jnp.float32) * ks_ref[0][..., None]
+    v = vc.astype(jnp.float32) * vs_ref[0][..., None]
+    s = jnp.einsum("kgh,tkh->kgt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    mask = pos < len_ref[b]
+    s = jnp.where(mask, s, _NEG)
+    m_old, l_old = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_old - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_old * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "kgt,tkh->kgh", p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-20)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_quant_pallas(
+    q: jax.Array,             # (B, KV, G, hd)
+    k_pool: jax.Array,        # (NB, bs, KV, hd) int8 | (NB, bs, KV, hd//2) u8
+    v_pool: jax.Array,        # same container as k_pool
+    k_scale: jax.Array,       # (NB, bs, KV) float32
+    v_scale: jax.Array,       # (NB, bs, KV) float32
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32 — effective (clamped) lengths
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention over quantized paged KV, out (B, KV, G, hd) f32.
+
+    Same scalar-prefetched block-table gather as the fp kernel — the block
+    table IS the BlockSpec index map — but each grid step DMAs int8/int4
+    codes plus a (bs, KV) scale sliver and dequantizes in VMEM.
+    """
+    B, KV, G, hd = q.shape
+    NB, bs, KVk, hds = k_pool.shape
+    nb = block_tables.shape[1]
+    packed4 = k_pool.dtype == jnp.uint8
+    assert KV == KVk and hds == (hd // 2 if packed4 else hd), (
+        q.shape, k_pool.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hds),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hds),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, KV),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd),
+                               lambda b, j, bt, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_attn_quant_kernel, bs=bs,
+                               scale=hd ** -0.5, packed4=packed4)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+        name=f"paged_decode_attention_{'int4' if packed4 else 'int8'}",
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q, k_pool, v_pool, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32))

@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.quant.pack import unpack_bitplanes
+from repro.quant.pack import (kv_dequantize, kv_quantize, kv_unpack_int4,
+                              unpack_bitplanes)
 from repro.quant.wrpn import fake_quant as _fake_quant_jnp
 
 
@@ -43,6 +44,99 @@ def paged_attention_ref(
     kg = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
     vg = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
     return decode_attention(q, kg, vg, lengths)
+
+
+def quant_paged_attention_ref(
+    q: jax.Array,             # (B, 1, H, hd)
+    k_pool: jax.Array,        # (NB, bs, KV, hd) int8 | (NB, bs, KV, hd//2) u8
+    v_pool: jax.Array,        # same container as k_pool
+    k_scale: jax.Array,       # (NB, bs, KV) float32 per-(token, head) scales
+    v_scale: jax.Array,       # (NB, bs, KV) float32
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32
+) -> jax.Array:
+    """Decode attention over *quantized* KV blocks: gather codes + scales,
+    dequantize (``codes * scale`` in f32 — exactly the write-side product
+    the fp-KV oracle stores), then the shared decode_attention math.  This
+    is the parity contract: a quantized pool and an oracle pool holding
+    the QDQ values must produce bitwise-identical logits."""
+    from repro.models.common import decode_attention
+
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+    kc = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    vc = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    if k_pool.dtype == jnp.uint8:  # nibble-packed uniform int4
+        kc, vc = kv_unpack_int4(kc), kv_unpack_int4(vc)
+    ks = k_scale[block_tables].reshape(B, nb * bs, k_scale.shape[2])
+    vs = v_scale[block_tables].reshape(B, nb * bs, v_scale.shape[2])
+    return decode_attention(q, kv_dequantize(kc, ks), kv_dequantize(vc, vs),
+                            lengths)
+
+
+def fused_qkv_paged_decode_ref(
+    x: jax.Array,             # (B, D) post-norm hidden, one token per row
+    wq, wk, wv,               # quant.pack.Packed projection weights
+    k_pool, v_pool,           # quantized blocks (pre-write, see below)
+    k_scale, v_scale,         # (NB, bs, KV) float32
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32 — length BEFORE the new token
+    qmax: jax.Array,          # scalar f32 code ceiling for this layer's KV
+    rope_theta: float,
+    num_heads: int,
+    num_kv_heads: int,
+):
+    """Composed oracle for the fused decode kernel.
+
+    Computes the q/k/v projections with :func:`qmm_ref`, applies RoPE at
+    position ``lengths``, quantizes the new token's K/V, and attends over
+    the *pre-write* pool with the new token spliced into the gathered view
+    (write-then-attend ≡ attend-with-splice).  Returns
+    ``(attn (B, 1, H, hd) f32, k_codes, v_codes, k_sc, v_sc)`` — the codes
+    and scales are handed back so the caller scatters them into the pool,
+    keeping the kernel free of aliased in-place outputs.
+    """
+    from repro.models.common import apply_rope, decode_attention
+
+    B, D = x.shape
+    H, KV = num_heads, num_kv_heads
+    hd = wq.scale.shape[-1] // H
+    # mirror apply_linear's astype(x.dtype) round-trips exactly — the
+    # bitwise contract with the *unfused* oracle-engine decode path
+    dt = x.dtype
+    q = qmm_ref(x, wq.planes, wq.scale, wq.bits).astype(dt).reshape(B, 1, H, hd)
+    k = qmm_ref(x, wk.planes, wk.scale, wk.bits).astype(dt).reshape(B, 1, KV, hd)
+    v = qmm_ref(x, wv.planes, wv.scale, wv.bits).astype(dt).reshape(B, 1, KV, hd)
+    pos = lengths.astype(jnp.int32)[:, None]                  # (B, 1)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    k_codes, k_sc = kv_quantize(k[:, 0], qmax)                # (B, KV, hd)
+    v_codes, v_sc = kv_quantize(v[:, 0], qmax)
+
+    nb = block_tables.shape[1]
+    bs = k_pool.shape[1]
+    Tc = nb * bs
+    kc = k_pool[block_tables].reshape(B, Tc, *k_pool.shape[2:])
+    vc = v_pool[block_tables].reshape(B, Tc, *v_pool.shape[2:])
+    if k_pool.dtype == jnp.uint8:
+        kc, vc = kv_unpack_int4(kc), kv_unpack_int4(vc)
+    ks = k_scale[block_tables].reshape(B, Tc, KV)
+    vs = v_scale[block_tables].reshape(B, Tc, KV)
+    kg = kv_dequantize(kc, ks)
+    vg = kv_dequantize(vc, vs)
+    # splice the new token's QDQ value at its slot (linear addressing; the
+    # caller clamps `lengths` so slot < Tc)
+    slot = jnp.minimum(lengths, Tc - 1)
+    rows = jnp.arange(B)
+    kg = kg.at[rows, slot].set(kv_dequantize(k_codes, k_sc))
+    vg = vg.at[rows, slot].set(kv_dequantize(v_codes, v_sc))
+    eff_len = jnp.minimum(lengths + 1, Tc)
+    out = decode_attention(q, kg, vg, eff_len)
+    if k_pool.dtype == jnp.uint8:
+        from repro.quant.pack import kv_pack_int4
+
+        k_codes, v_codes = kv_pack_int4(k_codes), kv_pack_int4(v_codes)
+    return out, k_codes, v_codes, k_sc, v_sc
 
 
 def qmm_ref(

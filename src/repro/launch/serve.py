@@ -12,6 +12,11 @@ params, packs them at a ReLeQ policy, and serves a synthetic workload:
 - ``--mode static``: the legacy one-shot fixed-batch greedy loop (kept
   as the parity/latency baseline).
 
+``--kv-bits B [B ...]`` quantizes the paged KV blocks themselves (int8
+codes + per-token-head scales, nibble-packed at 4 bits; one value per
+layer or one for all) — ``--kv-oracle`` serves the same tokens from the
+dequantized fp values as a parity check.
+
 ``--spec-k K --draft-bits B`` turns on speculative decoding with the
 quantized self-draft (``repro.spec``): the same packed weights re-read
 at B bitplanes roll K tokens per window and one batched verify call
@@ -81,12 +86,17 @@ def _continuous(args, cfg, model, sparams, policy):
     max_len = args.prompt_len + args.gen + 1
     spec = (SpecConfig(k=args.spec_k, draft_bits=args.draft_bits)
             if args.spec_k else None)
+    kv_kw = {}
+    if args.kv_bits:
+        kv_kw["kv_bits"] = (args.kv_bits[0] if len(args.kv_bits) == 1
+                            else args.kv_bits)
+        kv_kw["kv_oracle"] = args.kv_oracle
     engine = ServeEngine(model, sparams, num_slots=args.num_slots,
                          max_len=max_len, cache=args.cache,
                          block_size=args.block_size,
                          num_blocks=args.num_blocks,
                          prefill_chunk=args.prefill_chunk,
-                         spec=spec)
+                         spec=spec, **kv_kw)
     rng = np.random.default_rng(1)
     gens = [int(g) for g in
             rng.integers(max(1, args.gen // 2), args.gen + 1, args.requests)]
@@ -148,6 +158,15 @@ def main():
                          "and may preempt)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="paged cache: fixed prefill chunk length")
+    ap.add_argument("--kv-bits", type=int, nargs="+", default=None,
+                    help="paged cache: quantize KV blocks to this many "
+                         "bits (one value for all layers, or one per "
+                         "layer; int8 codes + per-token-head scales, "
+                         "nibble-packed at 4; requires --cache paged)")
+    ap.add_argument("--kv-oracle", action="store_true",
+                    help="store the dequantized fp KV values instead of "
+                         "codes (parity oracle for --kv-bits; same "
+                         "tokens, fp-size pool)")
     ap.add_argument("--requests", type=int, default=8,
                     help="continuous mode: synthetic workload size")
     ap.add_argument("--arrival-every", type=int, default=2,

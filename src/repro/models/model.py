@@ -29,7 +29,13 @@ def cache_batch_axis(key: str) -> int:
     per-sequence bookkeeping (``"length"``) as ``(B,)``.  The serving slot
     pool (repro.serve.cache) uses this to splice a batch-1 prefill cache
     into one slot of the pooled cache without knowing the family.
+
+    ``"kv_qmax"`` — the paged pool's per-layer KV code ceiling, shape
+    ``(L,)`` — has NO per-sequence axis; returns -1 (replicate).  Only the
+    paged pool carries it, so the slot pool's splice never sees -1.
     """
+    if key == "kv_qmax":
+        return -1
     return 0 if key == "length" else 1
 
 

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
-from repro.quant.pack import QDQ
+from repro.quant.pack import (QDQ, Packed, kv_dequantize, kv_pack_int4,
+                              kv_qdq, kv_quantize, kv_unpack_int4)
 from repro.quant.wrpn import fake_quant as wrpn_fake_quant
 from repro.models import mamba as mamba_mod
 from repro.models.common import (
@@ -123,12 +124,46 @@ class TransformerLM:
         return params
 
     # ------------------------------------------------------------- sublayers
+    def _fused_decode_attn(self, h, p, cache, layer):
+        """Fused quantized decode: bit-serial QKV + RoPE + KV-quantize +
+        paged attention in one kernel (kernels.ops.fused_qkv_paged_decode),
+        then the new token's codes/scales scattered into the pool.  The
+        scatter-after-attend is numerically write-then-attend: the kernel
+        folds the new token in from its own (quantized) computation."""
+        cfg = self.cfg
+        kc, vc, length = cache["k"][layer], cache["v"][layer], cache["length"]
+        ksc, vsc = cache["k_scale"][layer], cache["v_scale"][layer]
+        bt = cache["block_tables"]                      # (B, nb)
+        bs = kc.shape[1]
+        Tc = bt.shape[1] * bs
+        out, k_codes, v_codes, k_sc, v_sc = kops.fused_qkv_paged_decode(
+            h[:, 0], p["attn"]["wq"], p["attn"]["wk"], p["attn"]["wv"],
+            kc, vc, ksc, vsc, bt, length, cache["kv_qmax"][layer],
+            rope_theta=cfg.rope_theta, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads)
+        slot = jnp.minimum(length, Tc - 1)
+        phys = jnp.take_along_axis(bt, (slot // bs)[:, None], axis=1)[:, 0]
+        sub = slot % bs
+        cache["k"] = cache["k"].at[layer, phys, sub].set(k_codes)
+        cache["v"] = cache["v"].at[layer, phys, sub].set(v_codes)
+        cache["k_scale"] = cache["k_scale"].at[layer, phys, sub].set(k_sc)
+        cache["v_scale"] = cache["v_scale"].at[layer, phys, sub].set(v_sc)
+        return out
+
     def _attn(self, x, p, positions, *, window, cache=None, layer=None):
         """Residual attention sublayer; cache != None → single-token decode."""
         cfg = self.cfg
         B, S, D = x.shape
         H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if (cache is not None and S == 1 and "k_scale" in cache
+                and window is None and cfg.rope == "rope"
+                and all(isinstance(p["attn"][m], Packed)
+                        for m in ("wq", "wk", "wv"))):
+            out = self._fused_decode_attn(h, p, cache, layer)
+            out = out.reshape(B, S, H * hd)
+            out = apply_linear(out, p["attn"]["wo"])
+            return x + constrain(out, batch_axes(), seq_axis(), None)
         q = apply_linear(h, p["attn"]["wq"]).reshape(B, S, H, hd)
         k = apply_linear(h, p["attn"]["wk"]).reshape(B, S, KV, hd)
         v = apply_linear(h, p["attn"]["wv"]).reshape(B, S, KV, hd)
@@ -156,10 +191,37 @@ class TransformerLM:
             Tc = bt.shape[1] * bs                          # tokens per sequence
             slot = (length % Tc) if window is not None else jnp.minimum(length, Tc - 1)
             phys = jnp.take_along_axis(bt, (slot // bs)[:, None], axis=1)[:, 0]
-            kc = kc.at[phys, slot % bs].set(k[:, 0])
-            vc = vc.at[phys, slot % bs].set(v[:, 0])
+            sub = slot % bs
             eff_len = jnp.minimum(length + 1, Tc)
-            out = kops.paged_attention(q, kc, vc, bt, eff_len)
+            if "k_scale" in cache:
+                # quantized blocks (unfused path: windowed attention or
+                # unpacked weights): quantize the new token, scatter codes
+                # + per-(token, head) scales, attend with in-place dequant
+                qmax = cache["kv_qmax"][layer]
+                k_codes, k_sc = kv_quantize(k[:, 0], qmax)
+                v_codes, v_sc = kv_quantize(v[:, 0], qmax)
+                if kc.dtype == jnp.uint8:  # nibble-packed uniform int4
+                    k_codes, v_codes = kv_pack_int4(k_codes), kv_pack_int4(v_codes)
+                kc = kc.at[phys, sub].set(k_codes)
+                vc = vc.at[phys, sub].set(v_codes)
+                ksc = cache["k_scale"][layer].at[phys, sub].set(k_sc)
+                vsc = cache["v_scale"][layer].at[phys, sub].set(v_sc)
+                out = kops.paged_attention(q, kc, vc, bt, eff_len, ksc, vsc)
+                cache["k_scale"] = cache["k_scale"].at[layer].set(ksc)
+                cache["v_scale"] = cache["v_scale"].at[layer].set(vsc)
+            else:
+                if "kv_qmax" in cache:
+                    # fp-KV oracle: store the quantize-dequantize value —
+                    # exactly what the quantized read path reconstructs —
+                    # in fp32 blocks (the token-parity gate)
+                    qmax = cache["kv_qmax"][layer]
+                    k_w = kv_qdq(k[:, 0], qmax).astype(kc.dtype)
+                    v_w = kv_qdq(v[:, 0], qmax).astype(vc.dtype)
+                else:
+                    k_w, v_w = k[:, 0], v[:, 0]
+                kc = kc.at[phys, sub].set(k_w)
+                vc = vc.at[phys, sub].set(v_w)
+                out = kops.paged_attention(q, kc, vc, bt, eff_len)
             cache["k"] = cache["k"].at[layer].set(kc)
             cache["v"] = cache["v"].at[layer].set(vc)
         else:
@@ -453,13 +515,41 @@ class TransformerLM:
             q = apply_mrope(q, pos_in, cfg.rope_theta, cfg.mrope_sections)
             k = apply_mrope(k, pos_in, cfg.rope_theta, cfg.mrope_sections)
 
-        kc, vc = cache["k"][layer], cache["v"][layer]   # (NB, bs, KV, hd)
+        kc, vc = cache["k"][layer], cache["v"][layer]   # (NB, bs, KV, hd[/2])
         bt = cache["block_tables"][rows]                # (B, nb)
         bs = kc.shape[1]
         nb = bt.shape[1]
         Tc = nb * bs                                    # tokens per sequence
-        k_ctx = kc[bt].reshape(B, Tc, KV, hd)
-        v_ctx = vc[bt].reshape(B, Tc, KV, hd)
+        quant = "k_scale" in cache
+        oracle = not quant and "kv_qmax" in cache
+        if quant:
+            # dequantize the gathered context: codes · per-(token, head)
+            # scale — identical f32 values to what the oracle pool stores
+            ksc, vsc = cache["k_scale"][layer], cache["v_scale"][layer]
+            kcg = kc[bt].reshape(B, Tc, KV, -1)
+            vcg = vc[bt].reshape(B, Tc, KV, -1)
+            if kc.dtype == jnp.uint8:
+                kcg, vcg = kv_unpack_int4(kcg), kv_unpack_int4(vcg)
+            k_ctx = kv_dequantize(kcg, ksc[bt].reshape(B, Tc, KV))
+            v_ctx = kv_dequantize(vcg, vsc[bt].reshape(B, Tc, KV))
+        else:
+            k_ctx = kc[bt].reshape(B, Tc, KV, hd)
+            v_ctx = vc[bt].reshape(B, Tc, KV, hd)
+        # the cache stores QDQ values (codes·scale, or the oracle's fp copy
+        # of the same product), so in-chunk keys must attend through the
+        # SAME quantize-dequantize — otherwise a token scored inside a
+        # chunk (prefill / spec verify) diverges from the identical token
+        # scored one decode step later, breaking verify ≡ decode parity
+        k_att, v_att = k, v
+        if quant:
+            qmax = cache["kv_qmax"][layer]
+            k_codes, k_sc = kv_quantize(k, qmax)        # (B, C, KV, hd), (B, C, KV)
+            v_codes, v_sc = kv_quantize(v, qmax)
+            k_att = kv_dequantize(k_codes, k_sc)
+            v_att = kv_dequantize(v_codes, v_sc)
+        elif oracle:
+            k_att = kv_qdq(k, cache["kv_qmax"][layer])
+            v_att = kv_qdq(v, cache["kv_qmax"][layer])
         s_idx = jnp.arange(Tc, dtype=jnp.int32)[None, :]
         if window is None:
             ctx_pos = jnp.where(s_idx < starts[:, None], s_idx, -1)
@@ -467,7 +557,7 @@ class TransformerLM:
             # ring: slot s holds the youngest token p ≡ s (mod Tc), p < start
             p_tok = starts[:, None] - 1 - ((starts[:, None] - 1 - s_idx) % Tc)
             ctx_pos = jnp.where(p_tok >= 0, p_tok, -1)
-        out = chunk_attention(q, k_ctx, v_ctx, ctx_pos, k, v,
+        out = chunk_attention(q, k_ctx, v_ctx, ctx_pos, k_att, v_att,
                               positions, window=window)
 
         i_idx = jnp.arange(C, dtype=jnp.int32)[None, :]
@@ -477,8 +567,21 @@ class TransformerLM:
         blk = jnp.take_along_axis(bt, jnp.clip(logical // bs, 0, nb - 1),
                                   axis=1)
         phys = jnp.where(i_idx < valids[:, None], blk, kc.shape[0])  # OOB -> dropped
-        kc = kc.at[phys, logical % bs].set(k.astype(kc.dtype), mode="drop")
-        vc = vc.at[phys, logical % bs].set(v.astype(vc.dtype), mode="drop")
+        if quant:
+            # codes/scales computed above (the chunk attended their QDQ)
+            if kc.dtype == jnp.uint8:
+                k_codes, v_codes = kv_pack_int4(k_codes), kv_pack_int4(v_codes)
+            kc = kc.at[phys, logical % bs].set(k_codes, mode="drop")
+            vc = vc.at[phys, logical % bs].set(v_codes, mode="drop")
+            ksc = ksc.at[phys, logical % bs].set(k_sc, mode="drop")
+            vsc = vsc.at[phys, logical % bs].set(v_sc, mode="drop")
+            cache["k_scale"] = cache["k_scale"].at[layer].set(ksc)
+            cache["v_scale"] = cache["v_scale"].at[layer].set(vsc)
+        else:
+            # oracle writes the QDQ values it attended; fp writes raw k/v
+            k_w, v_w = (k_att, v_att) if oracle else (k, v)
+            kc = kc.at[phys, logical % bs].set(k_w.astype(kc.dtype), mode="drop")
+            vc = vc.at[phys, logical % bs].set(v_w.astype(vc.dtype), mode="drop")
         cache["k"] = cache["k"].at[layer].set(kc)
         cache["v"] = cache["v"].at[layer].set(vc)
 
@@ -625,6 +728,22 @@ class TransformerLM:
         if not cfg.tie_embeddings:
             add("lm_head", ("lm_head",), None, (D, cfg.vocab_size), D * cfg.vocab_size)
         return groups
+
+    def kv_quant_groups(self, seq_len: int = 4096) -> list[QuantGroup]:
+        """Per-layer KV-cache bitwidth groups (HAQ-style): one pseudo-group
+        per layer named ``kv.L{l:02d}`` whose "weights" are the K+V token
+        activations a sequence of ``seq_len`` stores for that layer.
+        ``n_macs=0`` — KV bits buy cache *bytes* (and decode bandwidth),
+        not multiply precision, so the cost model sees them purely through
+        the memory term.  ``path=("kv", l)`` is virtual: these groups are
+        consumed by the serving engine's ``kv_bits`` knob, never by the
+        params pytree."""
+        cfg = self.cfg
+        kv_hd = cfg.num_kv_heads * cfg.hd
+        return [QuantGroup(f"kv.L{l:02d}", ("kv", l), l,
+                           (seq_len, cfg.num_kv_heads, cfg.hd),
+                           2 * seq_len * kv_hd, 0)
+                for l in range(cfg.num_layers)]
 
     def frozen_bits(self) -> dict[str, int]:
         """Groups the agent may not touch (kept at 8 bits), per config."""

@@ -18,6 +18,31 @@ buffer divides ``N`` exactly like the parent matrix.
 Reconstruction:  ``W = (Σ_b 2^b · plane_b − n) / n · scale``
 Bit-serial GEMM: ``x @ W = (Σ_b 2^b (x @ plane_b) − n · rowsum(x)) / n · scale``
 (the offset is a rank-1 correction computed once per activation tile).
+
+Quantized-KV block layout (``serve.cache.PagedCachePool`` at ``kv_bits``)
+-------------------------------------------------------------------------
+KV blocks reuse the same symmetric mid-tread code family as the weight
+planes but store *codes*, not bitplanes — a KV block is written once per
+token and read many times, so read-side unpack cost dominates and plain
+int8 containers win:
+
+- code leaves ``k``/``v``: ``(L, NB, bs, KV, hd) int8`` holding
+  ``c = round(x / scale) ∈ [-qmax, +qmax]`` with ``qmax = 2^(b-1) - 1``;
+  at *uniform* 4 bits the container is nibble-packed to
+  ``(L, NB, bs, KV, hd//2) uint8`` (two codes per byte, ``u = c + 8``,
+  even head-dim index in the low nibble) — the 4x capacity deploy mode.
+- scale leaves ``k_scale``/``v_scale``: ``(L, NB, bs, KV) float32`` —
+  one amax scale per (layer, token slot, KV head).  Scales live at token
+  granularity *within* each block, so a token is quantized exactly once
+  at write time and never rescaled when its block's neighbors change.
+- ``kv_qmax``: ``(L,) float32`` data leaf carrying each layer's code
+  ceiling.  Per-layer bitwidths (the ReLeQ/HAQ search output) are plain
+  *data* under one int8 container, so a mixed KV grid still compiles
+  ONE decode executable.
+
+The fp-KV parity oracle (``kv_oracle=True``) keeps fp32 code leaves but
+writes ``dequantize(quantize(x))`` — the identical value the quantized
+read path reconstructs — so token streams must match bit-for-bit.
 """
 from __future__ import annotations
 
@@ -158,6 +183,67 @@ def repack_weight(packed: Packed, bits: int) -> Packed:
     else:
         planes, scale = one(packed.planes, packed.scale)
     return Packed(planes, scale, bits)
+
+
+# --------------------------------------------------------------------------
+# Quantized-KV helpers (module docstring: "Quantized-KV block layout").
+# These four functions are the single source of truth for KV numerics: the
+# serve cache, the Pallas kernels and the jnp oracles all call them, which
+# is what makes the fp-KV oracle parity gate *exact* rather than allclose.
+
+
+def kv_quantize(x, qmax):
+    """Per-(token, KV-head) symmetric quantization of new KV vectors.
+
+    ``x``: float (..., KV, hd); ``qmax``: scalar (static or traced) code
+    ceiling ``2^(b-1) - 1``.  Returns ``(codes int8 (..., KV, hd),
+    scale float32 (..., KV))`` with ``scale = amax(|x|) / qmax`` over the
+    head dim.  All-zero vectors get scale 0 and codes 0 (dequant -> 0).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    qmax = jnp.asarray(qmax, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)                     # (..., KV)
+    scale = amax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None]
+    codes = jnp.clip(jnp.round(x / safe), -qmax, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def kv_dequantize(codes, scale):
+    """codes int (..., KV, hd) + scale f32 (..., KV) -> float32 values."""
+    return codes.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[..., None]
+
+
+def kv_qdq(x, qmax):
+    """Quantize-dequantize — the write-side value of the fp-KV oracle.
+
+    Computes *exactly* ``kv_dequantize(*kv_quantize(x, qmax))`` so an
+    oracle cache (fp32 storage of these values) reproduces the quantized
+    read path bit-for-bit.
+    """
+    codes, scale = kv_quantize(x, qmax)
+    return kv_dequantize(codes, scale)
+
+
+def kv_pack_int4(codes):
+    """Nibble-pack int8 codes in [-7, 7]: (..., hd) -> (..., hd//2) uint8.
+
+    Shifted ``u = c + 8 ∈ [1, 15]``; even head index -> low nibble.  Only
+    used at *uniform* 4-bit KV (mixed per-layer grids stay int8).
+    """
+    hd = codes.shape[-1]
+    if hd % 2:
+        raise ValueError(f"head dim {hd} must be even for int4 packing")
+    u = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
+    return u[..., 0::2] | (u[..., 1::2] << 4)
+
+
+def kv_unpack_int4(packed):
+    """Inverse of :func:`kv_pack_int4`: (..., hd//2) uint8 -> (..., hd) int8."""
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                packed.shape[-1] * 2)
 
 
 def pad_contraction_to_8(w: np.ndarray) -> np.ndarray:

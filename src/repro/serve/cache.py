@@ -16,6 +16,29 @@ Physical block 0 is a reserved garbage sink: empty batch rows point their
 block tables at it, so the fixed-shape decode step can scatter "writes"
 for inactive rows without touching any live sequence's blocks.
 
+Quantized-KV block layout (``kv_bits=...``, paged pool only):
+
+- code leaves ``"k"``/``"v"``: ``(L, num_blocks, block_size, KV, hd)``
+  int8 symmetric codes in ``[-qmax, qmax]`` — or, when every layer is
+  4-bit, ``(L, num_blocks, block_size, KV, hd//2)`` uint8 with two
+  codes nibble-packed per byte (``quant.pack.kv_pack_int4``),
+- scale leaves ``"k_scale"``/``"v_scale"``: ``(L, num_blocks,
+  block_size, KV)`` float32, one absmax scale per (token, KV-head) —
+  written by the same scatter that writes the codes, so a block is
+  always internally consistent,
+- ``"kv_qmax"``: ``(L,)`` float32 per-layer code ceiling
+  ``2^(bits-1) - 1``.  Per-layer bitwidths are DATA, not shape — a
+  mixed {8,6,3}-bit grid runs the same decode executable as uniform 8.
+
+``kv_oracle=True`` (requires ``kv_bits``) keeps ``"k"``/``"v"`` as
+float32 leaves holding the exact quantize-dequantize values
+(``quant.pack.kv_qdq``) with no scale leaves: the dequantized product
+``codes · scale`` the quantized path computes is bitwise these stored
+floats, so engine token parity against the oracle is an exact-match
+gate, not an allclose.  The scale leaves ride in ``paged_keys`` so
+speculative decoding's recurrent-state snapshot skips them (they move
+with the blocks, not with the O(1) state).
+
 ``SlotCachePool`` is the legacy slot-granular pool (one ``max_len`` row
 per sequence, admission splices a batch-1 prefill cache in).  Kept for one
 release behind ``--cache slot`` as the parity baseline; the paged engine
@@ -65,6 +88,11 @@ class SlotCachePool:
         self.max_len = max_len
         self.mesh = mesh
         self.cache = model.init_cache(num_slots, max_len, dtype)
+        # hard per-sequence token bound (None = unbounded: recurrent or
+        # ring state fits any length); admission and engine.submit gate on it
+        self.length_bound = (
+            max_len if "k" in self.cache
+            and getattr(model.cfg, "sliding_window", None) is None else None)
         if mesh is not None:
             # data-axis sharding hook: slots live distributed over the
             # mesh's data axes (dist/sharding.cache_specs gives the slot
@@ -92,7 +120,11 @@ class SlotCachePool:
         return len(self._active) / self.num_slots
 
     def can_admit(self, n_tokens: int, reserve_blocks: int = 0) -> bool:
-        """Slot granularity: any free slot fits any (length-bounded) seq."""
+        """A free slot AND the sequence fitting its max_len-sized row.
+        Admitting an over-length sequence would silently wrap/clobber the
+        row — length is part of the admission decision, not just slots."""
+        if self.length_bound is not None and n_tokens > self.length_bound:
+            return False
         return bool(self._free)
 
     def alloc(self) -> int:
@@ -159,20 +191,47 @@ class PagedCachePool:
                   0.  Default allocates full slot-pool capacity
                   (num_seqs × blocks_per_seq + 1); pass less to
                   oversubscribe — that is the point of paging.
+    ``kv_bits``   quantize the KV blocks: an int (uniform) or a
+                  per-layer sequence of ints in 2..8.  See the module
+                  docstring for the block layout.  Uniform 4 selects the
+                  nibble-packed uint8 container (half the code bytes).
+    ``kv_oracle`` with ``kv_bits``: store the exact QDQ *values* in
+                  float32 instead of codes — the token-parity oracle the
+                  quantized engine is gated against.
     """
 
     def __init__(self, model, num_seqs: int, max_len: int, *,
                  block_size: int = 16, num_blocks: int | None = None,
-                 dtype=None, mesh=None):
+                 dtype=None, mesh=None, kv_bits=None, kv_oracle: bool = False):
         if num_seqs < 1:
             raise ValueError("num_seqs must be >= 1")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        if kv_oracle and kv_bits is None:
+            raise ValueError("kv_oracle requires kv_bits")
         self.num_seqs = self.num_slots = num_seqs  # num_slots: engine compat
         self.max_len = max_len
         self.mesh = mesh
         template = model.init_cache(num_seqs, max_len, dtype)
         self.paged_keys = tuple(k for k in PAGED_KEYS if k in template)
+        if kv_bits is not None and not self.paged_keys:
+            raise ValueError(
+                "kv_bits quantizes paged attention KV blocks; this model "
+                "family keeps O(1) recurrent state (nothing paged to "
+                "quantize)")
+        if kv_bits is not None:
+            L = template[self.paged_keys[0]].shape[0]
+            bits = ([int(kv_bits)] * L if np.isscalar(kv_bits)
+                    else [int(b) for b in kv_bits])
+            if len(bits) != L:
+                raise ValueError(
+                    f"kv_bits has {len(bits)} entries for {L} layers")
+            if any(not 2 <= b <= 8 for b in bits):
+                raise ValueError(f"kv_bits entries must be in 2..8: {bits}")
+            self.kv_bits = bits
+        else:
+            self.kv_bits = None
+        self.kv_oracle = bool(kv_oracle)
         self._ring = (getattr(model.cfg, "sliding_window", None) is not None
                       and bool(self.paged_keys))
         if self.paged_keys:
@@ -204,14 +263,37 @@ class PagedCachePool:
                           if n in ("pod", "data"))
             self.num_blocks = -(-self.num_blocks // d) * d
 
+        pack4 = (self.kv_bits is not None and not self.kv_oracle
+                 and all(b == 4 for b in self.kv_bits))
         self.cache = {}
         for key, leaf in template.items():
             if key in self.paged_keys:
                 L, _, _, KV, hd = leaf.shape
-                self.cache[key] = jnp.zeros(
-                    (L, self.num_blocks, self.block_size, KV, hd), leaf.dtype)
+                if self.kv_bits is None:
+                    shape, dt = (L, self.num_blocks, self.block_size, KV, hd), leaf.dtype
+                elif self.kv_oracle:
+                    # oracle: fp32 leaves that will hold exact QDQ values
+                    shape, dt = (L, self.num_blocks, self.block_size, KV, hd), jnp.float32
+                elif pack4:
+                    shape, dt = (L, self.num_blocks, self.block_size, KV, hd // 2), jnp.uint8
+                else:
+                    shape, dt = (L, self.num_blocks, self.block_size, KV, hd), jnp.int8
+                self.cache[key] = jnp.zeros(shape, dt)
             else:
                 self.cache[key] = leaf
+        if self.kv_bits is not None:
+            L = template[self.paged_keys[0]].shape[0]
+            KV = template[self.paged_keys[0]].shape[3]
+            self.cache["kv_qmax"] = jnp.asarray(
+                [float(2 ** (b - 1) - 1) for b in self.kv_bits], jnp.float32)
+            if not self.kv_oracle:
+                for key in ("k_scale", "v_scale"):
+                    self.cache[key] = jnp.zeros(
+                        (L, self.num_blocks, self.block_size, KV), jnp.float32)
+                # scale leaves are block state: ride in paged_keys so the
+                # spec path's recurrent snapshot/restore never touches them
+                # and cache_bytes() counts them toward the KV budget
+                self.paged_keys = self.paged_keys + ("k_scale", "v_scale")
         if mesh is not None:
             # same dist hook as the slot pool: the *block* axis (axis 1 of
             # every paged leaf — cache_batch_axis's slot position) shards
@@ -228,6 +310,15 @@ class PagedCachePool:
         self._active: set[int] = set()
         self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
         self._seq_blocks: dict[int, list[int]] = {}
+        # device mirror of block_tables, re-uploaded only when the host
+        # copy changed (or a donating backend consumed the old buffer)
+        self._bt_dev = None
+        self._bt_dirty = True
+        # per-sequence token bound: a non-ring attention cache caps every
+        # sequence at blocks_per_seq · block_size tokens
+        self.length_bound = (self.blocks_per_seq * self.block_size
+                             if self.blocks_per_seq and not self._ring
+                             else None)
 
     # ----------------------------------------------------------- bookkeeping
     @property
@@ -260,8 +351,13 @@ class PagedCachePool:
         prompt PLUS ``reserve_blocks`` of headroom (the scheduler passes
         one block per running sequence — a vLLM-style watermark so a fresh
         admission isn't immediately preempted by its neighbors' growth and
-        its chunked prefill burned)."""
+        its chunked prefill burned).  Sequences longer than the per-row
+        capacity are refused outright — ``blocks_needed`` clamps to
+        capacity, so without this gate an over-length prompt would be
+        admitted and silently truncated."""
         if not self._free_seqs:
+            return False
+        if self.length_bound is not None and n_tokens > self.length_bound:
             return False
         if not self.blocks_per_seq:
             # O(1)-state family: no blocks exist, nothing to reserve — a
@@ -296,6 +392,7 @@ class PagedCachePool:
             blk = self._free_blocks.pop()
             self.block_tables[seq, len(have)] = blk
             have.append(blk)
+        self._bt_dirty = True
         return True
 
     def free_seq(self, seq: int) -> None:
@@ -305,15 +402,24 @@ class PagedCachePool:
         self._free_blocks.extend(self._seq_blocks.pop(seq))
         self._free_blocks.sort(reverse=True)  # pop() -> lowest id
         self.block_tables[seq] = 0            # back to the garbage sink
+        self._bt_dirty = True
         self._free_seqs.append(seq)
         self._free_seqs.sort(reverse=True)
 
     # ------------------------------------------------------------- cache ops
     def step_cache(self) -> dict:
         """Device view for one prefill-chunk/decode call: pool leaves plus
-        the current block tables (data — shape never changes)."""
+        the current block tables (data — shape never changes).  The table
+        upload is cached across steps: steady-state decode (no growth, no
+        frees) reuses one device buffer instead of re-uploading B × nb
+        int32s per layer step.  A donating backend may consume the cached
+        buffer — ``is_deleted`` forces a re-upload then."""
         d = dict(self.cache)
-        d["block_tables"] = jnp.asarray(self.block_tables)
+        if (self._bt_dirty or self._bt_dev is None
+                or self._bt_dev.is_deleted()):
+            self._bt_dev = jnp.asarray(self.block_tables)
+            self._bt_dirty = False
+        d["block_tables"] = self._bt_dev
         return d
 
     def accept(self, cache: dict) -> None:

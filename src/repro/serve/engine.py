@@ -47,6 +47,7 @@ decode latency, mean row occupancy, (paged) mean block occupancy, and
 from __future__ import annotations
 
 import time
+from collections import deque
 
 import jax.numpy as jnp
 import numpy as np
@@ -70,9 +71,15 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefill_chunk: int = 16, max_pending: int = 0,
                  decode_fn=None, prefill_fn=None, mesh=None,
-                 spec=None, verify_fn=None):
+                 spec=None, verify_fn=None, kv_bits=None,
+                 kv_oracle: bool = False, metrics_window: int = 512):
         if cache not in ("paged", "slot"):
             raise ValueError(f"cache={cache!r} (want 'paged' or 'slot')")
+        if (kv_bits is not None or kv_oracle) and cache != "paged":
+            raise ValueError("kv_bits / kv_oracle require cache='paged' "
+                             "(the slot pool stores fp KV only)")
+        if metrics_window < 1:
+            raise ValueError("metrics_window must be >= 1")
         self.model = model
         self.sparams = sparams
         self.cache_kind = cache
@@ -81,7 +88,8 @@ class ServeEngine:
         if cache == "paged":
             self.pool = PagedCachePool(model, num_slots, max_len,
                                        block_size=block_size,
-                                       num_blocks=num_blocks, mesh=mesh)
+                                       num_blocks=num_blocks, mesh=mesh,
+                                       kv_bits=kv_bits, kv_oracle=kv_oracle)
             self._prefill = prefill_fn or make_chunked_prefill(model)
             self.prefill_chunk = prefill_chunk
         else:
@@ -94,11 +102,9 @@ class ServeEngine:
         # default decode donates the pool cache — step() immediately
         # replaces it, so XLA updates the KV buffers in place
         self._decode = decode_fn or make_decode_step(model, donate=True)
-        # attention caches without a sliding window hold exactly max_len
-        # tokens; SSM/windowed state is O(1)/O(window) so any length fits
-        self._length_bound = (
-            max_len if "k" in self.pool.cache
-            and model.cfg.sliding_window is None else None)
+        # per-sequence token bound now lives on the pool (None for
+        # recurrent/ring state, where any length fits)
+        self._length_bound = self.pool.length_bound
         # speculative decoding: draft = the target's own packed weights at
         # a lower-bit policy, sharing this pool's blocks (repro.spec)
         self.spec = spec
@@ -115,8 +121,13 @@ class ServeEngine:
         self._occupancy_sum = 0.0
         self._block_occupancy_sum = 0.0
         self._run_seconds = 0.0
-        self._decode_seconds: list[float] = []  # wall time per decode step
-        self._decode_tokens: list[int] = []     # tokens that step emitted
+        # per-step latency samples for the percentile metrics: bounded ring
+        # buffers (a long-lived engine must not grow host memory without
+        # bound; the percentiles become a sliding window over the last
+        # ``metrics_window`` decode steps, identical to the full history
+        # on runs shorter than the window)
+        self._decode_seconds: deque[float] = deque(maxlen=metrics_window)
+        self._decode_tokens: deque[int] = deque(maxlen=metrics_window)
         self._spec_windows = 0
         self._spec_proposed = 0
         self._spec_accepted = 0
@@ -498,6 +509,9 @@ class ServeEngine:
                 if self._decode_steps else 0.0)
             out["block_size"] = self.pool.block_size
             out["num_blocks"] = self.pool.num_blocks
+            if self.pool.kv_bits is not None:
+                out["kv_bits"] = list(self.pool.kv_bits)
+                out["kv_oracle"] = self.pool.kv_oracle
         if self.spec is not None:
             out["spec"] = {
                 "k": self.spec.k,

@@ -126,8 +126,12 @@ class ContinuousScheduler:
             if slot not in self.running:  # already preempted this pass
                 continue
             seq = self.running[slot]
-            k = max(int(want.get(slot, 0)), 0)
+            want_k = max(int(want.get(slot, 0)), 0)
             while slot in self.running:
+                # retry the FULL wanted window each pass: a preemption on
+                # the previous pass freed blocks, so a window that had
+                # shrunk toward zero may now be grantable again
+                k = want_k
                 while k > 0 and not self.pool.ensure(slot,
                                                      seq.cached_len + k + 1):
                     k -= 1  # shrink the window before taking blocks

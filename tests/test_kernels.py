@@ -121,3 +121,107 @@ def test_ops_wrapper_pads_and_dispatches():
         assert rel < 2e-2
     finally:
         os.environ["REPRO_PALLAS"] = "ref"
+
+
+# ------------------------------------------------------- quantized KV blocks
+def _quant_pools(NB, bs, KV, hd, kv_bits, seed=11):
+    """Random fp pool -> (codes, scales) in the requested block container."""
+    from repro.quant.pack import kv_pack_int4, kv_quantize
+
+    rng = np.random.default_rng(seed)
+    qmax = float(2 ** (kv_bits - 1) - 1)
+    kf = jnp.asarray(rng.normal(size=(NB, bs, KV, hd)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(NB, bs, KV, hd)), jnp.float32)
+    kc, ks = kv_quantize(kf, qmax)
+    vc, vs = kv_quantize(vf, qmax)
+    if kv_bits == 4:  # nibble-packed uint8 container
+        kc, vc = kv_pack_int4(kc), kv_pack_int4(vc)
+    return kc, vc, ks, vs, qmax
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])  # int8 codes / packed-int4 codes
+@pytest.mark.parametrize("case", ["block_boundary", "length_zero", "one_block"])
+def test_paged_attention_quant_edge_cases(kv_bits, case):
+    """Quantized-KV paged decode in interpret mode at the edges: length
+    exactly on a block boundary, all-masked length-0 garbage rows (zero
+    output, no NaN from the denominator guard), and an nb == 1 table."""
+    from repro.kernels.paged_attention import paged_attention_quant_pallas
+
+    B, bs, KV, G, hd = 3, 4, 2, 2, 8
+    nb = 1 if case == "one_block" else 3
+    NB = 1 + B * nb
+    q = jnp.asarray(RNG.normal(size=(B, 1, KV * G, hd)), jnp.float32)
+    kc, vc, ks, vs, _ = _quant_pools(NB, bs, KV, hd, kv_bits)
+    bt = jnp.asarray(1 + np.arange(B * nb).reshape(B, nb), jnp.int32)
+    if case == "block_boundary":
+        lengths = jnp.asarray([bs, 2 * bs, nb * bs], jnp.int32)
+    elif case == "length_zero":
+        lengths = jnp.asarray([0, 0, bs + 1], jnp.int32)
+        bt = bt.at[0].set(0).at[1].set(0)  # dead rows sit on the garbage sink
+    else:
+        lengths = jnp.asarray([1, bs // 2, bs], jnp.int32)
+    got = paged_attention_quant_pallas(
+        q.reshape(B, KV, G, hd), kc, vc, ks, vs, bt, lengths,
+        interpret=True).reshape(B, 1, KV * G, hd)
+    want = kref.quant_paged_attention_ref(q, kc, vc, ks, vs, bt, lengths)
+    assert not np.any(np.isnan(np.asarray(got)))
+    live = np.asarray(lengths) > 0
+    if case == "length_zero":
+        # all-masked rows: the kernel's l == 0 guard yields exact zeros
+        # (the jnp oracle's masked softmax degenerates to a uniform
+        # average there — dead rows are never consumed, so only the
+        # no-NaN/zero contract matters, not oracle agreement)
+        np.testing.assert_array_equal(np.asarray(got[~live]), 0.0)
+    np.testing.assert_allclose(np.asarray(got[live]),
+                               np.asarray(want, np.float32)[live],
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+@pytest.mark.parametrize("lengths_case", ["mid", "boundary", "zero"])
+def test_fused_decode_kernel_vs_ref(kv_bits, lengths_case):
+    """The fused QKV+RoPE+quantize+attend kernel vs its composed oracle:
+    identical codes/scales bitwise, attention output equal at activation
+    (bf16) resolution."""
+    from repro.kernels.fused_decode import fused_qkv_paged_decode_pallas
+    from repro.models.common import rope_freqs
+    from repro.quant.pack import Packed
+
+    B, nb, bs, KV, G, hd, D = 3, 3, 4, 2, 2, 8, 32
+    H = KV * G
+    NB = 1 + B * nb
+    Tc = nb * bs
+    kc, vc, ks, vs, qmax = _quant_pools(NB, bs, KV, hd, kv_bits)
+    bt = jnp.asarray(1 + np.arange(B * nb).reshape(B, nb), jnp.int32)
+    lengths = {"mid": [1, 5, Tc - 1],
+               "boundary": [bs - 1, bs, 2 * bs - 1],
+               "zero": [0, 0, 3]}[lengths_case]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    x = jnp.asarray(RNG.normal(size=(B, D)), jnp.bfloat16)
+    packs = {}
+    for name, n_out, bits in (("wq", H * hd, 4), ("wk", KV * hd, 3),
+                              ("wv", KV * hd, 8)):
+        p, s = pack_weight(jnp.asarray(RNG.normal(size=(D, n_out)),
+                                       jnp.float32), bits)
+        packs[name] = Packed(p, s, bits)
+    wq, wk, wv = packs["wq"], packs["wk"], packs["wv"]
+    ro, rkc, rvc, rks, rvs = kref.fused_qkv_paged_decode_ref(
+        x, wq, wk, wv, kc, vc, ks, vs, bt, lengths, jnp.float32(qmax),
+        1e4, H, KV)
+    inv = rope_freqs(hd, 1e4)
+    ang = lengths.astype(jnp.float32)[:, None] * inv
+    po, pkc, pvc, pks, pvs = fused_qkv_paged_decode_pallas(
+        x, wq.planes, wq.scale, wk.planes, wk.scale, wv.planes, wv.scale,
+        kc, vc, ks, vs, bt, lengths, jnp.cos(ang), jnp.sin(ang),
+        jnp.float32(qmax), bits_q=wq.bits, bits_k=wk.bits, bits_v=wv.bits,
+        num_heads=H, interpret=True)
+    po = po.reshape(B, 1, H, hd)
+    assert not np.any(np.isnan(np.asarray(po)))
+    np.testing.assert_array_equal(np.asarray(pkc), np.asarray(rkc))
+    np.testing.assert_array_equal(np.asarray(pvc), np.asarray(rvc))
+    np.testing.assert_array_equal(np.asarray(pks), np.asarray(rks))
+    np.testing.assert_array_equal(np.asarray(pvs), np.asarray(rvs))
+    # output contract is the activation dtype (bf16): exact there
+    np.testing.assert_array_equal(
+        np.asarray(po.astype(jnp.bfloat16), np.float32),
+        np.asarray(ro.astype(jnp.bfloat16), np.float32))

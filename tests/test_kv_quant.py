@@ -1,0 +1,353 @@
+"""Quantized KV-cache blocks: pack helpers, pool layout, engine token
+parity against the fp-KV oracle (EXACT match — the dequantized product the
+quantized path computes is bitwise what the oracle stores), spec-mode
+parity, the HAQ-style kv-bits action plumbing (env groups + latency
+evaluator), sharding specs, and the three serving-loop regression fixes
+that rode along (spec-window re-grant after preemption, bounded metrics
+buffers, length-aware admission)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.pack import (
+    kv_dequantize,
+    kv_pack_int4,
+    kv_qdq,
+    kv_quantize,
+    kv_unpack_int4,
+)
+from repro.quant.qat import policy_for
+from repro.serve import PagedCachePool, ServeEngine, SlotCachePool
+from repro.spec import SpecConfig
+from repro.train.serve import quantize_for_serving
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def glm4():
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    sparams = quantize_for_serving(model, model.init(RNG),
+                                   policy_for(model, default_bits=4))
+    return cfg, model, sparams
+
+
+def _prompt(cfg, n, seed):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,), 0,
+                                         cfg.vocab_size))
+
+
+def _run(model, sparams, cfg, *, num_slots=3, max_len=24, gens=(6, 6, 6),
+         **kw):
+    eng = ServeEngine(model, sparams, num_slots=num_slots, max_len=max_len,
+                      **kw)
+    rids = [eng.submit(_prompt(cfg, 3 + 2 * s, s), max_new_tokens=g)
+            for s, g in enumerate(gens, start=1)]
+    eng.run_until_drained()
+    return [eng.output(r) for r in rids], eng
+
+
+# --------------------------------------------------------------- kv helpers
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_kv_quantize_roundtrip(bits):
+    qmax = float(2 ** (bits - 1) - 1)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(5, 3, 16)),
+                    jnp.float32)
+    codes, scale = kv_quantize(x, qmax)
+    assert codes.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(codes))) <= qmax
+    # QDQ == dequantize(quantize): the oracle-storage identity
+    np.testing.assert_array_equal(np.asarray(kv_dequantize(codes, scale)),
+                                  np.asarray(kv_qdq(x, qmax)))
+    # reconstruction error bounded by half a step per head row
+    step = np.asarray(scale)[..., None]
+    err = np.abs(np.asarray(kv_dequantize(codes, scale)) - np.asarray(x))
+    assert np.all(err <= 0.5 * step + 1e-6)
+
+
+def test_kv_quantize_zero_row_yields_zero_codes():
+    codes, scale = kv_quantize(jnp.zeros((2, 3, 8)), 7.0)
+    np.testing.assert_array_equal(np.asarray(codes), 0)
+    np.testing.assert_array_equal(np.asarray(scale), 0.0)
+    np.testing.assert_array_equal(np.asarray(kv_dequantize(codes, scale)), 0.0)
+
+
+def test_kv_int4_nibble_roundtrip():
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(-7, 8, size=(4, 2, 16)), jnp.int8)
+    packed = kv_pack_int4(codes)
+    assert packed.dtype == jnp.uint8 and packed.shape == (4, 2, 8)
+    np.testing.assert_array_equal(np.asarray(kv_unpack_int4(packed)),
+                                  np.asarray(codes))
+
+
+# --------------------------------------------------------------- pool layout
+def test_paged_pool_quantized_layout(glm4):
+    cfg, model, _ = glm4
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+    pool = PagedCachePool(model, 2, 32, block_size=8, kv_bits=8)
+    NB = pool.num_blocks
+    assert pool.cache["k"].dtype == jnp.int8
+    assert pool.cache["k"].shape == (L, NB, 8, KV, hd)
+    assert pool.cache["k_scale"].shape == (L, NB, 8, KV)
+    assert pool.cache["k_scale"].dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(pool.cache["kv_qmax"]), 127.0)
+    assert set(pool.paged_keys) == {"k", "v", "k_scale", "v_scale"}
+    # uniform 4-bit: nibble-packed container at half the code bytes
+    p4 = PagedCachePool(model, 2, 32, block_size=8, kv_bits=4)
+    assert p4.cache["k"].dtype == jnp.uint8
+    assert p4.cache["k"].shape == (L, p4.num_blocks, 8, KV, hd // 2)
+    # mixed grid including 4 stays int8 (bits are data, not shape)
+    pm = PagedCachePool(model, 2, 32, block_size=8, kv_bits=[8, 4][:L])
+    assert pm.cache["k"].dtype == jnp.int8
+    # oracle: fp32 value storage, no scale leaves
+    po = PagedCachePool(model, 2, 32, block_size=8, kv_bits=4, kv_oracle=True)
+    assert po.cache["k"].dtype == jnp.float32
+    assert "k_scale" not in po.cache and "kv_qmax" in po.cache
+
+
+def test_paged_pool_quantized_cache_bytes_ratio(glm4):
+    """int4 KV blocks must cost well under half the fp16 bytes per block
+    (codes at hd/2 bytes + one f32 scale per token-head)."""
+    cfg, model, _ = glm4
+    fp = PagedCachePool(model, 2, 32, block_size=8)
+    q4 = PagedCachePool(model, 2, 32, block_size=8, kv_bits=4)
+    per_block_fp = fp.cache_bytes() / fp.num_blocks
+    per_block_q4 = q4.cache_bytes() / q4.num_blocks
+    assert per_block_q4 < 0.5 * per_block_fp
+
+
+def test_paged_pool_kv_validation(glm4):
+    cfg, model, _ = glm4
+    with pytest.raises(ValueError, match="kv_oracle requires"):
+        PagedCachePool(model, 2, 32, kv_oracle=True)
+    with pytest.raises(ValueError, match="2..8"):
+        PagedCachePool(model, 2, 32, kv_bits=9)
+    with pytest.raises(ValueError, match="entries for"):
+        PagedCachePool(model, 2, 32, kv_bits=[8, 8, 8, 8, 8])
+    rw = build_model(get_config("rwkv6-1.6b", smoke=True))
+    with pytest.raises(ValueError, match="O\\(1\\) recurrent"):
+        PagedCachePool(rw, 2, 32, kv_bits=8)
+
+
+def test_engine_rejects_kv_bits_on_slot_pool(glm4):
+    cfg, model, sparams = glm4
+    with pytest.raises(ValueError, match="cache='paged'"):
+        ServeEngine(model, sparams, cache="slot", kv_bits=8)
+
+
+# ------------------------------------------------------- engine token parity
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_engine_quantized_matches_oracle_exact(glm4, kv_bits):
+    """The tentpole parity gate: a quantized-KV engine and an fp-KV oracle
+    engine (same qmax, values stored as exact QDQ floats) emit IDENTICAL
+    tokens — the dequantized codes·scale product is bitwise the stored
+    oracle value, so this is equality, not allclose."""
+    cfg, model, sparams = glm4
+    got, _ = _run(model, sparams, cfg, cache="paged", kv_bits=kv_bits)
+    want, _ = _run(model, sparams, cfg, cache="paged", kv_bits=kv_bits,
+                   kv_oracle=True)
+    assert got == want
+
+
+def test_engine_mixed_kv_grid_matches_oracle(glm4):
+    cfg, model, sparams = glm4
+    bits = [8, 3][:cfg.num_layers]
+    got, eng = _run(model, sparams, cfg, cache="paged", kv_bits=bits)
+    want, _ = _run(model, sparams, cfg, cache="paged", kv_bits=bits,
+                   kv_oracle=True)
+    assert got == want
+    assert eng.metrics()["kv_bits"] == bits
+
+
+def test_engine_quantized_spec_matches_plain_decode(glm4):
+    """Greedy speculative decoding over quantized blocks is token-identical
+    to plain quantized decode (drafts read/write the same quantized blocks
+    through the same tables; the recurrent snapshot skips scale leaves)."""
+    cfg, model, sparams = glm4
+    plain, _ = _run(model, sparams, cfg, cache="paged", kv_bits=4)
+    spec, eng = _run(model, sparams, cfg, cache="paged", kv_bits=4,
+                     spec=SpecConfig(k=2, draft_bits=3))
+    assert spec == plain
+    assert eng.metrics()["spec"]["windows"] > 0
+
+
+def test_engine_quantized_preemption_parity(glm4):
+    """Block exhaustion under quantized KV preempts-and-replays without
+    changing any client-visible stream."""
+    cfg, model, sparams = glm4
+    roomy, _ = _run(model, sparams, cfg, cache="paged", kv_bits=4,
+                    block_size=4, gens=(10, 10, 10))
+    tight, eng = _run(model, sparams, cfg, cache="paged", kv_bits=4,
+                      block_size=4, num_blocks=7, gens=(10, 10, 10))
+    assert tight == roomy
+    assert eng.metrics()["preemptions"] > 0
+
+
+# ------------------------------------------------------------ action plumbing
+def test_kv_quant_groups(glm4):
+    cfg, model, _ = glm4
+    groups = model.kv_quant_groups(seq_len=128)
+    assert [g.name for g in groups] == [f"kv.L{l:02d}"
+                                        for l in range(cfg.num_layers)]
+    g = groups[0]
+    assert g.n_macs == 0
+    assert g.n_weights == 2 * 128 * cfg.num_kv_heads * cfg.hd
+    assert g.path == ("kv", 0)
+
+
+def test_quant_env_kv_groups_extend_episode(glm4):
+    from repro.core import costmodel
+    from repro.core.env import QuantEnv
+
+    cfg, model, _ = glm4
+    wg = model.quant_groups(seq_len=64)
+    kvg = model.kv_quant_groups(seq_len=64)
+    env = QuantEnv(groups=list(wg), evaluate=lambda bits: 1.0,
+                   weight_std={}, kv_groups=list(kvg))
+    assert env.T == len(wg) + len(kvg)
+    # walk the whole episode; the kv steps land at the tail
+    obs = env.reset()
+    done = False
+    while not done:
+        obs, r, done, info = env.step(0)  # always pick the lowest bitwidth
+    assert info["group"] == kvg[-1].name
+    assert all(info["bits"][g.name] == 2 for g in kvg)
+    # SQ prices the kv groups (memory-only: n_macs = 0 still contributes)
+    sq_all8 = costmodel.state_of_quantization(
+        [8] * env.T, env.groups)
+    assert info["quant"] < sq_all8
+
+
+def test_engine_latency_evaluator_parses_kv_bits(glm4, monkeypatch):
+    from repro.autotune.workers import EngineLatencyEvaluator
+
+    cfg, model, sparams = glm4
+    ev = EngineLatencyEvaluator(model, model.init(RNG), num_slots=2,
+                                decode_steps=2, warmup_steps=1,
+                                kv_quant=True)
+    assert ev.kv_group_names == tuple(
+        g.name for g in model.kv_quant_groups())
+    seen = {}
+    real_from_params = ServeEngine.from_params.__func__
+
+    def spy(cls, mdl, params, policy, **kw):
+        seen["kv_bits"] = kw.get("kv_bits")
+        return real_from_params(cls, mdl, params, policy, **kw)
+
+    monkeypatch.setattr(ServeEngine, "from_params", classmethod(spy))
+    bits = {n: 4 for n in ev.weight_group_names}
+    bits.update({n: 3 for n in ev.kv_group_names})
+    lat, ref = ev(bits)
+    assert seen["kv_bits"] == [3] * cfg.num_layers
+    assert lat > 0 and ref > 0
+
+
+def test_cache_specs_for_quantized_pool(glm4):
+    from repro.dist.sharding import cache_specs
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    cfg, model, _ = glm4
+    pool = PagedCachePool(model, 2, 32, block_size=8, kv_bits=8)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1, 1),
+                ("pod", "data", "model"))
+    specs = cache_specs(pool.step_cache(), mesh)
+    # scale leaves shard on the block axis (axis 1) like the code leaves;
+    # the per-layer qmax vector has no per-sequence axis -> replicated
+    assert specs["k_scale"][1] == specs["k"][1]
+    assert all(s is None for i, s in enumerate(specs["k_scale"]) if i != 1)
+    assert specs["kv_qmax"] == P()
+    assert specs["block_tables"] == P()
+
+
+# ------------------------------------------------- serving-loop regressions
+def test_reserve_for_spec_regrants_after_preemption(glm4):
+    """Regression: a preemption frees blocks mid-reservation, so the
+    surviving (older) row's spec window must be retried at full size —
+    previously the shrunk (possibly 0) window was kept, silently losing
+    speculation for the step."""
+    from repro.serve.queue import AdmissionQueue
+    from repro.serve.request import Request, SamplingParams
+    from repro.serve.scheduler import ContinuousScheduler
+
+    cfg, model, _ = glm4
+    # 2 rows; pool with 4 usable blocks of 4 tokens each
+    pool = PagedCachePool(model, 2, 16, block_size=4, num_blocks=5)
+    sched = ContinuousScheduler(pool, AdmissionQueue())
+    for rid in (0, 1):
+        req = Request(rid, np.asarray([1, 2, 3]), 8, SamplingParams(), None)
+        slot = pool.alloc_seq()
+        assert pool.ensure(slot, 8)  # two blocks each -> pool exhausted
+        sched.start(req, slot, first_token=1, cached_len=8)
+    assert pool.num_free_blocks == 0
+    want = {s: 4 for s in sched.running}
+    granted, preempted = sched.reserve_for_spec(want)
+    # the youngest was preempted; its 2 freed blocks must re-enable the
+    # oldest's FULL window (8 cached + 4 + 1 = 13 tokens -> 4 blocks)
+    assert len(preempted) == 1
+    assert preempted[0].request_id == 1
+    assert granted == {0: 4}
+
+
+def test_decode_metrics_buffers_are_bounded(glm4):
+    cfg, model, sparams = glm4
+    _, eng = _run(model, sparams, cfg, cache="paged", metrics_window=4,
+                  gens=(8, 8, 8))
+    assert eng._decode_steps > 4  # ran longer than the window
+    assert len(eng._decode_seconds) == 4
+    assert len(eng._decode_tokens) == 4
+    m = eng.metrics()
+    assert m["decode_step_p50_ms"] > 0
+
+
+def test_decode_metrics_parity_on_short_runs(glm4):
+    """A run shorter than the window sees every sample — the percentile
+    metrics are computed over the identical full history."""
+    cfg, model, sparams = glm4
+    _, eng = _run(model, sparams, cfg, cache="paged", gens=(4, 4, 4))
+    assert eng._decode_steps < 512  # default window
+    assert len(eng._decode_seconds) == eng._decode_steps
+    assert len(eng._decode_tokens) == eng._decode_steps
+
+
+def test_overlength_prompt_rejected_engine_keeps_serving(glm4):
+    cfg, model, sparams = glm4
+    for kind in ("paged", "slot"):
+        eng = ServeEngine(model, sparams, num_slots=2, max_len=16,
+                          cache=kind)
+        with pytest.raises(ValueError, match="cache tokens"):
+            eng.submit(_prompt(cfg, 20, 0), max_new_tokens=4)
+        rid = eng.submit(_prompt(cfg, 4, 1), max_new_tokens=3)
+        eng.run_until_drained()
+        assert len(eng.output(rid)) == 3
+
+
+def test_pools_can_admit_honors_length(glm4):
+    """Regression: both pools must refuse sequences beyond per-row
+    capacity at ADMISSION time (blocks_needed used to clamp, silently
+    truncating an over-length sequence)."""
+    cfg, model, _ = glm4
+    slot = SlotCachePool(model, 2, 16)
+    assert slot.can_admit(16) and not slot.can_admit(17)
+    paged = PagedCachePool(model, 2, 16, block_size=4)
+    assert paged.can_admit(16) and not paged.can_admit(17)
+
+
+def test_block_table_upload_cached_across_steady_steps(glm4):
+    cfg, model, _ = glm4
+    pool = PagedCachePool(model, 2, 16, block_size=4)
+    seq = pool.alloc_seq()
+    assert pool.ensure(seq, 8)
+    bt1 = pool.step_cache()["block_tables"]
+    bt2 = pool.step_cache()["block_tables"]
+    assert bt1 is bt2  # steady state: same device buffer, no re-upload
+    assert pool.ensure(seq, 13)  # growth dirties the table
+    bt3 = pool.step_cache()["block_tables"]
+    assert bt3 is not bt2
+    pool.free_seq(seq)
+    bt4 = pool.step_cache()["block_tables"]
+    assert bt4 is not bt3
