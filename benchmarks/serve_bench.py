@@ -20,6 +20,19 @@ structural wins and records them in ``BENCH_serve.json``:
 - memory: at EQUAL paged-leaf cache bytes the paged pool serves strictly
   more concurrent sequences than the slot pool.
 
+A *multi-tenant* section pins the prefix cache's two wins on the
+workload it exists for — N tenants sharing a long system prompt with
+short unique user turns, arrivals staggered one request per step:
+
+- prefill work: at a fixed total prompt length, prefill *launches*
+  must be strictly decreasing as the share ratio rises (0 -> 0.5 -> 1
+  of the system prompt reused across a tenant's requests) — shared
+  full blocks are mapped by refcount, never re-prefilled;
+- admitted concurrency: at EQUAL cache bytes (same block pool) the
+  sharing engine must reach a strictly higher peak of concurrently
+  running sequences than a ``prefix_cache=False`` baseline, because
+  the admission gate charges only *new* blocks against the pool.
+
 A *speculative* section benchmarks quantized self-draft decoding
 (``repro.spec``) on a weight-traffic-bound cell: acceptance rate per
 draft bitwidth, end-to-end tokens/s vs the non-spec paged engine, and
@@ -61,6 +74,13 @@ share one jit cache per policy; a warmup pass runs before timing.
   (prefill/decode pins), ``tokens_per_s`` (kv8/kv4 paged rows) and
   ``concurrency_int4`` (peak sequences at equal bytes vs slot, the
   ``>= 2x`` assertion),
+- ``multi_tenant``: prefix-cache section — per share-ratio
+  ``{prefill_launches, prefix_hit_rate, hit_tokens, cow_copies,
+  peak_concurrent, preemptions}`` (launches strictly decreasing with
+  ratio, the assertion) plus ``concurrency`` ``{shared_peak,
+  baseline_peak, num_blocks, kv_bytes}`` — shared peak strictly above
+  the ``prefix_cache=False`` baseline at equal cache bytes — and the
+  section's tenant/prompt geometry,
 - ``speculative``: per draft-bitwidth acceptance/speedup medians.
 """
 from __future__ import annotations
@@ -372,6 +392,131 @@ def run_kv_quant(model, cfg, args, sparams) -> dict:
     return out
 
 
+def run_multi_tenant(model, cfg, args, sparams) -> dict:
+    """Multi-tenant prefix-cache section: N tenants x shared system
+    prompt x short user turns, arrivals staggered one per step (so a
+    tenant's later requests see the blocks its first request published).
+
+    Two sub-gates, both deterministic (counts and peaks, not timing):
+
+    - **launch sweep** (ample blocks): at a FIXED total prompt length,
+      raise the share ratio — the fraction of the prompt drawn from the
+      tenant's system prompt — through 0 / 0.5 / 1 and assert prefill
+      launches strictly decrease: shared full blocks are mapped by
+      refcount instead of re-prefilled, and only the unique tail still
+      runs chunks.  One prefill + one decode executable across the
+      whole sweep (partial prefill reuses the fixed-shape chunk).
+    - **concurrency gate** (tight blocks, equal bytes): the SAME pool
+      (same ``num_blocks``, byte-identical) serves the full-share
+      workload with and without ``prefix_cache``.  The pool is sized so
+      a no-sharing admission (every request charged its full
+      ``ceil((prompt+1)/bs)`` blocks) can hold only a couple of
+      sequences, while the sharing gate — which charges *new* blocks
+      only — admits every tenant's tail alongside one copy of each
+      system prompt.  Peak concurrently-running sequences must be
+      strictly higher with sharing.
+    """
+    bs = args.block_size
+    T = args.mt_tenants
+    S = args.mt_shared // bs * bs  # full blocks only — hits are block-granular
+    plen = S + args.mt_user
+    gen = 8
+    max_len = plen + gen + 1
+    blocks_per_seq = -(-max_len // bs)
+    n = max(args.requests, 2 * T)
+    rng = np.random.default_rng(11)
+    sys_prompts = rng.integers(0, cfg.vocab_size, (max(T, 2), S))
+
+    def make_prompts(n_req, tenants, ratio, seed):
+        r = np.random.default_rng(seed)
+        shared = int(S * ratio) // bs * bs
+        prompts = r.integers(0, cfg.vocab_size, (n_req, plen))
+        for i in range(n_req):
+            prompts[i, :shared] = sys_prompts[i % tenants, :shared]
+        return prompts
+
+    def drive(prompts, prefill_fn, decode_fn, *, num_slots, num_blocks,
+              prefix_cache=True):
+        eng = ServeEngine(model, sparams, num_slots=num_slots,
+                          max_len=max_len, cache="paged", block_size=bs,
+                          num_blocks=num_blocks,
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_fn=prefill_fn, decode_fn=decode_fn,
+                          prefix_cache=prefix_cache)
+        submitted, peak = 0, 0
+        while submitted < len(prompts) or eng.scheduler.has_work():
+            while submitted < len(prompts) and eng.steps >= submitted:
+                eng.submit(prompts[submitted], gen + 1)
+                submitted += 1
+            eng.step()
+            peak = max(peak, eng.num_running)
+        return eng, peak
+
+    # --- launch sweep: ample pool (full capacity per slot + slack, so
+    # launch counts are preemption-free and exactly reproducible)
+    ample = args.batch * (blocks_per_seq + 2) + 1
+    prefill_fn = make_chunked_prefill(model, donate=False)
+    decode_fn = make_decode_step(model, donate=False)
+    out: dict = {"tenants": T, "shared_tokens": S, "user_tokens": plen - S,
+                 "requests": n, "gen": gen, "ratios": {}}
+    launches = []
+    for ratio in (0.0, 0.5, 1.0):
+        prompts = make_prompts(n, T, ratio, seed=23)
+        eng, peak = drive(prompts, prefill_fn, decode_fn,
+                          num_slots=args.batch, num_blocks=ample)
+        m = eng.metrics()
+        pc = m["prefix_cache"]
+        assert m["preemptions"] == 0, (ratio, m["preemptions"])
+        out["ratios"][str(ratio)] = {
+            "prefill_launches": m["prefill_launches"],
+            "prefix_hit_rate": round(m["prefix_hit_rate"], 3),
+            "hit_tokens": pc["hit_tokens"],
+            "cow_copies": pc["cow_copies"],
+            "peak_concurrent": peak,
+            "preemptions": m["preemptions"],
+        }
+        launches.append(m["prefill_launches"])
+    assert launches[0] > launches[1] > launches[2], (
+        f"multi-tenant gate: prefill launches {launches} not strictly "
+        f"decreasing over share ratios 0/0.5/1 — {out}")
+    assert prefill_fn._cache_size() == 1, prefill_fn._cache_size()
+    assert decode_fn._cache_size() == 1, decode_fn._cache_size()
+    out["prefill_launches"] = launches
+
+    # --- concurrency gate: tight pool, equal bytes, full sharing.
+    # Sized from the sharing engine's true demand — one prefix chain per
+    # tenant, every request's unique tail + decode block, the 1-block
+    # admission watermark per sequence, a little slack, the garbage
+    # block — which is far below n_gate * blocks-per-request, the rent a
+    # no-sharing admission charges.
+    t_gate, n_gate = 2, max(args.requests, 8)
+    prefix_blocks = S // bs
+    gate_blocks = (t_gate * prefix_blocks
+                   + n_gate * (blocks_per_seq - prefix_blocks)
+                   + n_gate + 2 + 1)
+    prompts = make_prompts(n_gate, t_gate, 1.0, seed=29)
+    pf2 = make_chunked_prefill(model, donate=False)
+    df2 = make_decode_step(model, donate=False)
+    beng, base_peak = drive(prompts, pf2, df2, num_slots=n_gate,
+                            num_blocks=gate_blocks, prefix_cache=False)
+    weng, shared_peak = drive(prompts, pf2, df2, num_slots=n_gate,
+                              num_blocks=gate_blocks, prefix_cache=True)
+    assert weng.pool.cache_bytes() == beng.pool.cache_bytes()
+    out["concurrency"] = {
+        "shared_peak": shared_peak,
+        "baseline_peak": base_peak,
+        "requests": n_gate, "tenants": t_gate,
+        "num_blocks": gate_blocks,
+        "kv_bytes": weng.pool.cache_bytes(),
+    }
+    assert shared_peak > base_peak, (
+        f"multi-tenant gate: shared peak concurrency {shared_peak} not "
+        f"above the no-sharing baseline {base_peak} at equal cache "
+        f"bytes — {out['concurrency']}")
+    assert pf2._cache_size() == 1 and df2._cache_size() == 1
+    return out
+
+
 def run_spec(args) -> dict:
     """Speculative section: acceptance x draft bitwidth + tokens/s vs the
     non-spec paged engine, with the ``>= 1.3x`` gate at the cheapest
@@ -548,7 +693,8 @@ def bench(args):
 def write_record(args, rows, path: str, paged_mixed: dict | None = None,
                  speculative: dict | None = None,
                  paged_gate: dict | None = None,
-                 kv_quant: dict | None = None) -> dict:
+                 kv_quant: dict | None = None,
+                 multi_tenant: dict | None = None) -> dict:
     """Persist the per-bitwidth static/continuous/paged tokens/s plus the
     mixed-prompt-length paged section so the perf trajectory is comparable
     across PRs (CI uploads this file as an artifact; humans diff it)."""
@@ -575,6 +721,8 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None,
         rec["paged_vs_slot_gate"] = paged_gate
     if kv_quant is not None:
         rec["kv_quant"] = kv_quant
+    if multi_tenant is not None:
+        rec["multi_tenant"] = multi_tenant
     if speculative is not None:
         rec["speculative"] = speculative
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -609,6 +757,19 @@ def main() -> None:
                     default=True,
                     help="run the quantized-KV section (oracle parity, "
                          "executable pins, int4 2x-concurrency gate)")
+    ap.add_argument("--mt", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the multi-tenant prefix-cache section "
+                         "(launch sweep + equal-bytes concurrency gate)")
+    ap.add_argument("--mt-tenants", type=int, default=4,
+                    help="multi-tenant section: tenants in the launch "
+                         "sweep (each owns one system prompt)")
+    ap.add_argument("--mt-shared", type=int, default=512,
+                    help="multi-tenant section: system-prompt tokens "
+                         "(rounded down to whole blocks)")
+    ap.add_argument("--mt-user", type=int, default=16,
+                    help="multi-tenant section: unique user-turn tokens "
+                         "appended per request")
     ap.add_argument("--spec", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="run the speculative-decoding section (1.3x gate)")
@@ -648,6 +809,17 @@ def main() -> None:
               f"int4 peak_concurrent {c['paged_int4_peak']} >= "
               f"2x slot {c['slot_peak']} at kv_bytes "
               f"{c['paged_kv_bytes']} <= {c['slot_kv_bytes']}", flush=True)
+    mt = None
+    if args.mt:
+        mt = run_multi_tenant(model, cfg, args, sparams)
+        c = mt["concurrency"]
+        print(f"multi_tenant: prefill_launches "
+              f"{' > '.join(str(l) for l in mt['prefill_launches'])} "
+              f"over share 0/0.5/1 ({mt['tenants']} tenants x "
+              f"{mt['shared_tokens']}-token system prompt), "
+              f"peak_concurrent shared={c['shared_peak']} vs "
+              f"no-sharing={c['baseline_peak']} at equal kv_bytes "
+              f"{c['kv_bytes']}", flush=True)
     mixed = run_paged_mixed(model, sparams, cfg, args)
     print(f"paged_mixed: prefill_executables="
           f"{mixed['paged']['prefill_executables']} "
@@ -672,7 +844,8 @@ def main() -> None:
                   f"p99={d['decode_step_p99_ms']:.2f}ms", flush=True)
     if args.out:
         write_record(args, rows, args.out, paged_mixed=mixed,
-                     speculative=spec, paged_gate=gate, kv_quant=kv)
+                     speculative=spec, paged_gate=gate, kv_quant=kv,
+                     multi_tenant=mt)
         print(f"wrote {args.out}", flush=True)
 
 

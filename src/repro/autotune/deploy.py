@@ -52,7 +52,11 @@ def hot_swap(engine, sparams, *, drain: bool = True,
     has no KV yet, so it prefills *and* decodes entirely under the new
     policy, exactly like post-swap submissions.  The swap itself is
     atomic w.r.t. the engine loop: ``step()`` reads ``engine.sparams``
-    once per call.
+    once per call.  The paged pool's prefix trie is flushed either way:
+    its cached KV blocks were computed under the old weights, and a
+    post-swap request hitting them would decode against stale state —
+    the weight policy is a key dimension of the prefix cache, realized
+    as invalidation-on-swap.
     """
     drained_steps = 0
     if drain:
@@ -72,8 +76,12 @@ def hot_swap(engine, sparams, *, drain: bool = True,
             for req in reversed(held):  # restore FIFO order at the head
                 engine.queue.push_front(req)
     engine.sparams = sparams
+    flush = getattr(engine.pool, "flush_prefix_cache", None)
+    if flush is not None:
+        flush()
     return {"drained_steps": drained_steps,
-            "swapped_at_step": engine.steps}
+            "swapped_at_step": engine.steps,
+            "prefix_cache_flushed": flush is not None}
 
 
 def _engine_geometry(engine) -> dict:
@@ -82,7 +90,8 @@ def _engine_geometry(engine) -> dict:
     if engine.cache_kind == "paged":
         kw.update(block_size=engine.pool.block_size,
                   num_blocks=engine.pool.num_blocks,
-                  prefill_chunk=engine.prefill_chunk)
+                  prefill_chunk=engine.prefill_chunk,
+                  prefix_cache=engine.pool.prefix_cache)
     return kw
 
 

@@ -213,7 +213,14 @@ def cache_specs(cache, mesh):
     its block axis sits exactly where the slot axis does (axis 1 of every
     paged ``(L, NB, bs, ...)`` leaf), so KV *blocks* spread over the data
     axes; the tiny per-sequence ``block_tables`` replicate (every shard
-    needs the full table to resolve its gathers)."""
+    needs the full table to resolve its gathers).
+
+    Prefix sharing changes none of this: refcounts and the prefix trie
+    are host-side bookkeeping over *block ids*, sharing is just two
+    table rows naming the same block (tables are replicated either way),
+    and the COW copy (``serve.cache._cow_jit``) is a block-row
+    gather/scatter whose donated output keeps each leaf's sharding —
+    the sharded pool leaves are unchanged by this feature."""
     sizes = _mesh_sizes(mesh)
     daxes = tuple(a for a in ("pod", "data") if a in sizes)
 

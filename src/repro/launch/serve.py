@@ -17,6 +17,11 @@ codes + per-token-head scales, nibble-packed at 4 bits; one value per
 layer or one for all) — ``--kv-oracle`` serves the same tokens from the
 dequantized fp values as a parity check.
 
+``--prefix-cache`` (default on, paged only) shares full prompt-prefix
+KV blocks across sequences via the pool's refcounted trie; ``--tenants
+N`` shapes the synthetic workload into N tenants sharing a system
+prompt so the hit-rate/shared-blocks printout exercises it.
+
 ``--spec-k K --draft-bits B`` turns on speculative decoding with the
 quantized self-draft (``repro.spec``): the same packed weights re-read
 at B bitplanes roll K tokens per window and one batched verify call
@@ -96,12 +101,21 @@ def _continuous(args, cfg, model, sparams, policy):
                          block_size=args.block_size,
                          num_blocks=args.num_blocks,
                          prefill_chunk=args.prefill_chunk,
+                         prefix_cache=args.prefix_cache,
                          spec=spec, **kv_kw)
     rng = np.random.default_rng(1)
     gens = [int(g) for g in
             rng.integers(max(1, args.gen // 2), args.gen + 1, args.requests)]
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.requests, args.prompt_len))
+    if args.tenants:
+        # multi-tenant mix: requests of one tenant share a system-prompt
+        # prefix (3/4 of the prompt), exercising the prefix cache
+        shared = args.prompt_len * 3 // 4
+        sys_prompts = rng.integers(0, cfg.vocab_size,
+                                   (args.tenants, shared))
+        for i in range(args.requests):
+            prompts[i, :shared] = sys_prompts[i % args.tenants]
     sampling = SamplingParams(temperature=args.temperature)
     submitted = 0
     while submitted < args.requests or engine.scheduler.has_work():
@@ -120,6 +134,14 @@ def _continuous(args, cfg, model, sparams, policy):
           + (f" preemptions={m['preemptions']} "
              f"block_occ={m['mean_block_occupancy']:.2f}"
              if args.cache == "paged" else ""))
+    if args.cache == "paged":
+        pc = m["prefix_cache"]
+        print(f"prefix_cache={'on' if pc['enabled'] else 'off'} "
+              f"hit_rate={m['prefix_hit_rate']:.3f} "
+              f"blocks_shared={m['blocks_shared']:.1f} "
+              f"prefill_launches={m['prefill_launches']} "
+              f"hit_tokens={pc['hit_tokens']} cow={pc['cow_copies']} "
+              f"evictions={pc['evictions']}")
     if "spec" in m:
         s = m["spec"]
         print(f"spec k={s['k']} draft_bits={args.draft_bits} "
@@ -167,6 +189,15 @@ def main():
                     help="store the dequantized fp KV values instead of "
                          "codes (parity oracle for --kv-bits; same "
                          "tokens, fp-size pool)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paged cache: share full prompt-prefix KV blocks "
+                         "across sequences (refcounted copy-on-write; "
+                         "auto-off for ring/recurrent families)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="continuous mode: group requests into this many "
+                         "tenants sharing a system-prompt prefix (0 = "
+                         "fully unique prompts)")
     ap.add_argument("--requests", type=int, default=8,
                     help="continuous mode: synthetic workload size")
     ap.add_argument("--arrival-every", type=int, default=2,

@@ -39,6 +39,43 @@ gate, not an allclose.  The scale leaves ride in ``paged_keys`` so
 speculative decoding's recurrent-state snapshot skips them (they move
 with the blocks, not with the O(1) state).
 
+Prefix caching (``prefix_cache=True``, the default where it is sound):
+full blocks are deduplicated across sequences.  Every block is
+refcounted; a radix/trie index maps *full-block token content* to the
+physical block holding its KV, so admission can splice a shared system
+prompt into a new sequence's block table with an incref instead of
+re-prefilling it.  The trie is per-pool, so (weight-policy, kv-bits) are
+implicit key dimensions — one pool serves one packed policy at one KV
+layout, and ``flush_prefix_cache()`` (called by ``autotune.deploy.
+hot_swap``) drops the index when the weights change.  Block lifecycle::
+
+      alloc_seq/ensure                    record_tokens/record_token
+    free ──────────────▶ owned (rc=1) ─────────────▶ owned+published
+      ▲                     │                            │   ▲
+      │ not published       │ free_seq                   │   │ map_shared
+      │                     ▼              free_seq      ▼   │ (incref)
+      └───────────────── (returned)       ┌──────▶ shared (rc>1)
+      ▲                                   │              │
+      │      evict (LRU leaf, rc==0)      │              │ divergent write
+    cached (rc=0, in trie) ◀──────────────┘              ▼
+      ▲      ▲                                  COW: copy codes+scales
+      │      └── free_seq of last owner              to a fresh block,
+      └───────── map_shared revives (incref)         decref the shared one
+
+Only refcount-0 blocks are evictable — eviction order is (refcount,
+recency): shared/owned blocks (rc ≥ 1) never leave, and among cached
+blocks the least-recently-used one with no cached children goes first
+(the deepest cached node of any chain qualifies, so eviction never
+starves; a victim's still-owned children are orphaned from the root —
+lookups then match a shorter prefix, never stale content).  Writes into a
+shared block (decode at the block boundary, spec drafts, the one-token
+tail of a block-aligned full hit) copy-on-write first: a fresh block is
+allocated, code *and* scale leaves are copied bitwise on device, and the
+shared block is decref'd — concurrent readers never observe the write.
+Recurrent families (Mamba/RWKV state, ring windows) auto-disable the
+prefix cache: their per-token state depends on the full history, so
+skipping prefill would be wrong, not just stale.
+
 ``SlotCachePool`` is the legacy slot-granular pool (one ``max_len`` row
 per sequence, admission splices a batch-1 prefill cache in).  Kept for one
 release behind ``--cache slot`` as the parity baseline; the paged engine
@@ -47,10 +84,14 @@ is pinned token-for-token against it in ``tests/test_serve_paged.py``.
 Allocator invariants (both pools, hypothesis-tested):
 - an id is returned at most once until freed; double-free raises,
 - ``ensure`` never over-allocates and reports exhaustion as ``False``,
-- freeing returns every block; pools drain back to their initial state.
+- freeing returns every block; pools drain back to their initial state,
+- with sharing: one refcount per owning sequence, never negative;
+  freeing a shared block decrefs and never touches the free heap; COW
+  preserves block contents bitwise (including ``k_scale``/``v_scale``).
 """
 from __future__ import annotations
 
+import heapq
 import math
 
 import jax
@@ -104,7 +145,8 @@ class SlotCachePool:
             self.cache = jax.device_put(
                 self.cache, shd.to_named(shd.cache_specs(self.cache, mesh),
                                          mesh))
-        self._free = list(range(num_slots - 1, -1, -1))  # pop() -> lowest id
+        # min-heap: heappop -> lowest id (a sorted range is already a heap)
+        self._free = list(range(num_slots))
         self._active: set[int] = set()
 
     # ----------------------------------------------------------- bookkeeping
@@ -119,10 +161,13 @@ class SlotCachePool:
     def occupancy(self) -> float:
         return len(self._active) / self.num_slots
 
-    def can_admit(self, n_tokens: int, reserve_blocks: int = 0) -> bool:
+    def can_admit(self, n_tokens: int, reserve_blocks: int = 0,
+                  tokens=None) -> bool:
         """A free slot AND the sequence fitting its max_len-sized row.
         Admitting an over-length sequence would silently wrap/clobber the
-        row — length is part of the admission decision, not just slots."""
+        row — length is part of the admission decision, not just slots.
+        ``tokens`` (the prefix-cache hint) is accepted for interface
+        parity with the paged pool and ignored: slots don't share."""
         if self.length_bound is not None and n_tokens > self.length_bound:
             return False
         return bool(self._free)
@@ -130,7 +175,7 @@ class SlotCachePool:
     def alloc(self) -> int:
         if not self._free:
             raise RuntimeError(f"all {self.num_slots} slots in use")
-        slot = self._free.pop()
+        slot = heapq.heappop(self._free)
         self._active.add(slot)
         return slot
 
@@ -144,8 +189,7 @@ class SlotCachePool:
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not allocated")
         self._active.remove(slot)
-        self._free.append(slot)
-        self._free.sort(reverse=True)  # keep pop() -> lowest id deterministic
+        heapq.heappush(self._free, slot)  # O(log n); pop stays lowest-id
 
     free_seq = free
 
@@ -178,6 +222,42 @@ class SlotCachePool:
                    for k in PAGED_KEYS if k in self.cache)
 
 
+class _PrefixNode:
+    """One full block's worth of token content in the prefix trie.
+
+    ``key`` is the tuple of ``block_size`` token ids this block holds,
+    ``block`` the physical block storing their KV, ``parent``/``children``
+    the radix chain (child key = the *next* full block of tokens), and
+    ``last_use`` a monotone tick for LRU eviction among refcount-0 nodes.
+    """
+
+    __slots__ = ("key", "parent", "children", "block", "depth", "last_use")
+
+    def __init__(self, key, parent, block, depth):
+        self.key = key
+        self.parent = parent
+        self.children: dict[tuple, _PrefixNode] = {}
+        self.block = block
+        self.depth = depth
+        self.last_use = 0
+
+
+def _cow_copy(cache, src, dst, keys):
+    """Copy one physical block (codes AND scale leaves) src -> dst."""
+    out = dict(cache)
+    for key in keys:
+        leaf = out[key]
+        out[key] = leaf.at[:, dst].set(leaf[:, src])
+    return out
+
+
+# module-level jit, same reasoning as _splice_jit: src/dst are data, the
+# key tuple is static, and the executable is shared across pool instances.
+# Kept separate from the prefill/decode executables so the ONE-prefill +
+# ONE-decode pins are untouched by sharing.
+_cow_jit = jax.jit(_cow_copy, static_argnames=("keys",), donate_argnums=(0,))
+
+
 class PagedCachePool:
     """Block-granular KV pool + per-sequence block tables.
 
@@ -198,11 +278,17 @@ class PagedCachePool:
     ``kv_oracle`` with ``kv_bits``: store the exact QDQ *values* in
                   float32 instead of codes — the token-parity oracle the
                   quantized engine is gated against.
+    ``prefix_cache`` share full KV blocks across sequences via the
+                  refcounted trie (module docstring).  Auto-disabled for
+                  ring windows and recurrent families, where paged KV is
+                  not the whole per-token state and skipping prefill
+                  would change tokens, not just waste work.
     """
 
     def __init__(self, model, num_seqs: int, max_len: int, *,
                  block_size: int = 16, num_blocks: int | None = None,
-                 dtype=None, mesh=None, kv_bits=None, kv_oracle: bool = False):
+                 dtype=None, mesh=None, kv_bits=None, kv_oracle: bool = False,
+                 prefix_cache: bool = True):
         if num_seqs < 1:
             raise ValueError("num_seqs must be >= 1")
         if block_size < 1:
@@ -306,10 +392,32 @@ class PagedCachePool:
 
         self.block_tables = np.zeros((num_seqs, max(self.blocks_per_seq, 1)),
                                      np.int32)
-        self._free_seqs = list(range(num_seqs - 1, -1, -1))  # pop -> lowest
+        # min-heaps: heappop -> lowest id (sorted ranges are valid heaps)
+        self._free_seqs = list(range(num_seqs))
         self._active: set[int] = set()
-        self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+        self._free_blocks = list(range(1, self.num_blocks))
         self._seq_blocks: dict[int, list[int]] = {}
+        # ---- prefix cache: refcounts + trie index over full-block content.
+        # Sound only when the paged KV blocks ARE the whole per-token state:
+        # ring windows rewrite blocks in place and recurrent leaves (Mamba
+        # ssm_*, RWKV wkv, token-shift) fold the full history into O(1)
+        # state, so a mapped prefix would not reproduce the cold tokens.
+        recurrent = set(template) - set(self.paged_keys) - {"length"}
+        self.prefix_cache = bool(prefix_cache and self.blocks_per_seq
+                                 and not self._ring and not recurrent)
+        self._refcount: dict[int, int] = {}       # block -> #owning seqs
+        self._root = _PrefixNode(None, None, 0, 0)
+        self._node_of: dict[int, _PrefixNode] = {}  # any published block
+        self._cached: dict[int, _PrefixNode] = {}   # refcount-0, evictable
+        self._seq_tokens: dict[int, list[int]] = {}  # fed tokens per seq
+        self._seq_node: dict[int, _PrefixNode] = {}  # deepest published node
+        self._seq_pub: dict[int, int] = {}           # #published full blocks
+        self._tick = 0
+        self.prefix_lookups = 0       # admissions that consulted the trie
+        self.prefix_hits = 0          # ... that mapped >= 1 shared block
+        self.prefix_hit_tokens = 0    # prompt tokens served from the trie
+        self.cow_copies = 0
+        self.prefix_evictions = 0
         # device mirror of block_tables, re-uploaded only when the host
         # copy changed (or a donating backend consumed the old buffer)
         self._bt_dev = None
@@ -327,7 +435,19 @@ class PagedCachePool:
 
     @property
     def num_free_blocks(self) -> int:
-        return len(self._free_blocks)
+        """Blocks an allocation can claim: the free heap PLUS cached
+        (refcount-0, trie-indexed) blocks, which evict on demand."""
+        return len(self._free_blocks) + len(self._cached)
+
+    @property
+    def blocks_shared(self) -> int:
+        """Physical blocks currently mapped by more than one sequence."""
+        return sum(1 for c in self._refcount.values() if c > 1)
+
+    @property
+    def prefix_cached_blocks(self) -> int:
+        """Refcount-0 blocks held in the trie awaiting reuse/eviction."""
+        return len(self._cached)
 
     @property
     def active_slots(self) -> frozenset:
@@ -338,7 +458,7 @@ class PagedCachePool:
 
     def block_occupancy(self) -> float:
         usable = self.num_blocks - 1
-        return 1.0 - len(self._free_blocks) / usable if usable else 0.0
+        return 1.0 - self.num_free_blocks / usable if usable else 0.0
 
     def blocks_needed(self, n_tokens: int) -> int:
         if not self.blocks_per_seq:
@@ -346,15 +466,23 @@ class PagedCachePool:
         n = min(n_tokens, self.blocks_per_seq * self.block_size)
         return -(-n // self.block_size)
 
-    def can_admit(self, n_tokens: int, reserve_blocks: int = 0) -> bool:
-        """Admissible iff a row is free and the free list covers the whole
-        prompt PLUS ``reserve_blocks`` of headroom (the scheduler passes
-        one block per running sequence — a vLLM-style watermark so a fresh
-        admission isn't immediately preempted by its neighbors' growth and
-        its chunked prefill burned).  Sequences longer than the per-row
-        capacity are refused outright — ``blocks_needed`` clamps to
-        capacity, so without this gate an over-length prompt would be
-        admitted and silently truncated."""
+    def can_admit(self, n_tokens: int, reserve_blocks: int = 0,
+                  tokens=None) -> bool:
+        """Admissible iff a row is free and the reclaimable blocks cover
+        the whole prompt PLUS ``reserve_blocks`` of headroom (the
+        scheduler passes one block per running sequence — a vLLM-style
+        watermark so a fresh admission isn't immediately preempted by its
+        neighbors' growth and its chunked prefill burned).  Sequences
+        longer than the per-row capacity are refused outright —
+        ``blocks_needed`` clamps to capacity, so without this gate an
+        over-length prompt would be admitted and silently truncated.
+
+        ``tokens`` (the replay token ids) lets the gate count only *new*
+        blocks: trie-matched prefix blocks arrive by incref, not
+        allocation.  A block-aligned full-prompt hit costs one extra block
+        — the COW copy of the last shared block that the one-token tail
+        prefill (we always re-prefill >= 1 token for its logits) writes
+        into."""
         if not self._free_seqs:
             return False
         if self.length_bound is not None and n_tokens > self.length_bound:
@@ -363,22 +491,72 @@ class PagedCachePool:
             # O(1)-state family: no blocks exist, nothing to reserve — a
             # free row is the whole admission decision
             return True
-        return (len(self._free_blocks)
-                >= self.blocks_needed(n_tokens) + reserve_blocks)
+        need = self.blocks_needed(n_tokens)
+        free = self.num_free_blocks
+        if tokens is not None and self.prefix_cache:
+            hits = self._match_nodes(tokens)
+            if hits:
+                need -= len(hits)
+                if len(hits) * self.block_size >= len(tokens):
+                    need += 1  # admission COW of the last shared block
+                # mapped cached blocks leave the reclaimable set
+                free -= sum(1 for n in hits if n.block in self._cached)
+        return free >= need + reserve_blocks
 
     def alloc_seq(self) -> int:
         if not self._free_seqs:
             raise RuntimeError(f"all {self.num_seqs} sequences in use")
-        seq = self._free_seqs.pop()
+        seq = heapq.heappop(self._free_seqs)
         self._active.add(seq)
         self._seq_blocks[seq] = []
         return seq
 
+    def _alloc_block(self) -> int:
+        """Claim one block at refcount 1: free heap first, then evict the
+        least-recently-used refcount-0 trie leaf.  Caller must have
+        checked ``num_free_blocks`` — exhaustion here is a bug."""
+        if self._free_blocks:
+            blk = heapq.heappop(self._free_blocks)
+        else:
+            blk = self._evict_lru()
+        self._refcount[blk] = 1
+        return blk
+
+    def _evict_lru(self) -> int:
+        """Evict the LRU cached node with no CACHED children — the
+        deepest cached node of any chain qualifies, so a candidate always
+        exists while ``_cached`` is non-empty.  A candidate may still
+        have *owned* children (an admission COW decrefs the last shared
+        block back to the trie while its mapper goes on publishing
+        children under it); evicting it orphans those from the root —
+        future lookups just match a shorter prefix, never stale
+        content."""
+        best = None
+        for blk, node in self._cached.items():
+            if any(c.block in self._cached for c in node.children.values()):
+                continue
+            key = (node.last_use, -node.depth, blk)
+            if best is None or key < best[0]:
+                best = (key, blk, node)
+        assert best is not None, "cached blocks exist but none evictable"
+        _, blk, node = best
+        del self._cached[blk]
+        self._detach(node)
+        self.prefix_evictions += 1
+        return blk
+
+    def _detach(self, node: _PrefixNode) -> None:
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+        node.parent = None
+        self._node_of.pop(node.block, None)
+
     def ensure(self, seq: int, n_tokens: int) -> bool:
         """Grow ``seq`` to cover ``n_tokens`` (clamped to its capacity).
 
-        Returns False — allocating *nothing* — when the free list cannot
-        cover the growth; the scheduler answers with preemption.
+        Returns False — allocating *nothing* — when free + evictable
+        blocks cannot cover the growth; the scheduler answers with
+        preemption.
         """
         if seq not in self._active:
             raise ValueError(f"seq {seq} is not allocated")
@@ -386,10 +564,10 @@ class PagedCachePool:
         need = self.blocks_needed(n_tokens) - len(have)
         if need <= 0:
             return True
-        if need > len(self._free_blocks):
+        if need > self.num_free_blocks:
             return False
         for _ in range(need):
-            blk = self._free_blocks.pop()
+            blk = self._alloc_block()
             self.block_tables[seq, len(have)] = blk
             have.append(blk)
         self._bt_dirty = True
@@ -399,12 +577,194 @@ class PagedCachePool:
         if seq not in self._active:
             raise ValueError(f"seq {seq} is not allocated")
         self._active.remove(seq)
-        self._free_blocks.extend(self._seq_blocks.pop(seq))
-        self._free_blocks.sort(reverse=True)  # pop() -> lowest id
+        for blk in self._seq_blocks.pop(seq):
+            self._decref(blk)
         self.block_tables[seq] = 0            # back to the garbage sink
         self._bt_dirty = True
-        self._free_seqs.append(seq)
-        self._free_seqs.sort(reverse=True)
+        heapq.heappush(self._free_seqs, seq)
+        self._seq_tokens.pop(seq, None)
+        self._seq_node.pop(seq, None)
+        self._seq_pub.pop(seq, None)
+
+    def _decref(self, blk: int) -> None:
+        """Drop one ownership reference.  A still-shared block (refcount
+        > 1) only decrements — it must NEVER reach the free heap while
+        another sequence reads it.  At refcount 0 a published block parks
+        in the trie as evictable; an unpublished one returns to the heap."""
+        count = self._refcount.get(blk, 0)
+        if count <= 0:
+            raise ValueError(f"block {blk} is not allocated")
+        if count > 1:
+            self._refcount[blk] = count - 1
+            return
+        del self._refcount[blk]
+        node = self._node_of.get(blk)
+        if node is not None:
+            self._tick += 1
+            node.last_use = self._tick
+            self._cached[blk] = node
+        else:
+            heapq.heappush(self._free_blocks, blk)
+
+    # ---------------------------------------------------------- prefix cache
+    def _block_chunks(self, tokens):
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            yield tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+
+    def _match_nodes(self, tokens) -> list[_PrefixNode]:
+        """Longest chain of trie nodes matching ``tokens`` full blocks."""
+        node, out = self._root, []
+        for key in self._block_chunks(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            out.append(child)
+            node = child
+        return out
+
+    def map_shared(self, seq: int, tokens) -> int:
+        """Map the longest trie-matched prefix of ``tokens`` into a fresh
+        sequence's block table with an incref per block; returns how many
+        prompt tokens are thereby already cached (0 = no hit).
+
+        The count is capped at ``len(tokens) - 1``: at least one tail
+        token is always prefilled, because admission needs the last
+        prompt token's logits to sample from.  When the whole prompt is
+        block-aligned in the trie that tail re-enters the last shared
+        block, so it is COW'd here — at admission time, while the gate's
+        block accounting (``can_admit``) still holds.
+        """
+        if not self.prefix_cache or not len(tokens):
+            return 0
+        if seq not in self._active:
+            raise ValueError(f"seq {seq} is not allocated")
+        if self._seq_blocks[seq]:
+            raise ValueError("map_shared requires a fresh (empty) sequence")
+        self.prefix_lookups += 1
+        nodes = self._match_nodes(tokens)
+        if not nodes:
+            return 0
+        have = self._seq_blocks[seq]
+        self._tick += 1
+        for i, node in enumerate(nodes):
+            blk = node.block
+            self._refcount[blk] = self._refcount.get(blk, 0) + 1
+            self._cached.pop(blk, None)  # reserved again: not evictable
+            node.last_use = self._tick
+            self.block_tables[seq, i] = blk
+            have.append(blk)
+        self._seq_node[seq] = nodes[-1]
+        self._seq_pub[seq] = len(nodes)
+        self._bt_dirty = True
+        cached = min(len(nodes) * self.block_size, len(tokens) - 1)
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += cached
+        if cached < len(nodes) * self.block_size:
+            ok = self.cow_for_write(seq, cached)
+            assert ok, "can_admit reserved the admission-COW block"
+        return cached
+
+    def record_tokens(self, seq: int, tokens) -> None:
+        """Record ``seq``'s fed-token history (prompt replay) and publish
+        every newly completed full block into the trie.  Idempotent for
+        prefixes already recorded."""
+        if not self.prefix_cache or seq not in self._active:
+            return
+        toks = self._seq_tokens.setdefault(seq, [])
+        if len(tokens) > len(toks):
+            toks[:] = [int(t) for t in tokens]
+        self._publish(seq)
+
+    def record_token(self, seq: int, token) -> None:
+        """Append one fed token (decode/spec advance) and publish if it
+        completed a block.  Callers only record *accepted* tokens whose
+        KV writes have landed — rejected spec drafts never publish."""
+        if not self.prefix_cache or seq not in self._active:
+            return
+        self._seq_tokens.setdefault(seq, []).append(int(token))
+        self._publish(seq)
+
+    def _publish(self, seq: int) -> None:
+        toks = self._seq_tokens.get(seq, [])
+        have = self._seq_blocks[seq]
+        bs = self.block_size
+        done = self._seq_pub.get(seq, 0)
+        if done < 0:  # poisoned by flush_prefix_cache mid-flight
+            return
+        node = self._seq_node.get(seq) or self._root
+        while (done + 1) * bs <= len(toks) and done < len(have):
+            key = tuple(toks[done * bs:(done + 1) * bs])
+            child = node.children.get(key)
+            if child is None and have[done] not in self._node_of:
+                child = _PrefixNode(key, node, have[done], node.depth + 1)
+                node.children[key] = child
+                self._node_of[have[done]] = child
+            if child is None:
+                # this physical block already indexes other content (it
+                # was COW'd from a published block): leave the trie as-is
+                break
+            self._tick += 1
+            child.last_use = self._tick
+            node = child
+            done += 1
+        self._seq_node[seq] = node
+        self._seq_pub[seq] = done
+
+    def cow_for_write(self, seq: int, start: int,
+                      end: int | None = None) -> bool:
+        """Make every block covering write positions ``[start, end)``
+        privately owned before a KV write lands there: a shared block
+        (refcount > 1) is replaced by a fresh block holding a bitwise
+        device copy of its codes AND scale leaves, and decref'd.  Returns
+        False — changing nothing further — if allocation is exhausted;
+        the scheduler answers with preemption, exactly like ``ensure``.
+
+        Sole-owner published blocks are NOT copied: the only writes the
+        engine issues into them re-store identical values (the
+        deterministic recompute of the same fed tokens), so readers
+        mapping the block later still see exactly its published content.
+        """
+        if seq not in self._active:
+            raise ValueError(f"seq {seq} is not allocated")
+        have = self._seq_blocks[seq]
+        if not self.prefix_cache or not have:
+            return True
+        end = start + 1 if end is None else max(end, start + 1)
+        first = start // self.block_size
+        last = min((end - 1) // self.block_size, len(have) - 1)
+        for i in range(first, last + 1):
+            blk = have[i]
+            if self._refcount.get(blk, 0) <= 1:
+                continue
+            if not self.num_free_blocks:
+                return False
+            new = self._alloc_block()
+            self.cache = _cow_jit(self.cache, np.int32(blk), np.int32(new),
+                                  self.paged_keys)
+            self._refcount[blk] -= 1
+            have[i] = new
+            self.block_tables[seq, i] = new
+            self._bt_dirty = True
+            self.cow_copies += 1
+        return True
+
+    def flush_prefix_cache(self) -> None:
+        """Drop the prefix index: cached (refcount-0) blocks return to the
+        free heap, the trie empties, and in-flight sequences stop
+        publishing (their KV predates whatever invalidated the cache —
+        weight hot-swap being the canonical caller via
+        ``autotune.deploy.hot_swap``).  Shared mappings stay valid: live
+        sequences keep their refcounts and block tables."""
+        for blk in self._cached:
+            heapq.heappush(self._free_blocks, blk)
+        self._cached.clear()
+        self._node_of.clear()
+        self._root = _PrefixNode(None, None, 0, 0)
+        for seq in self._seq_node:
+            self._seq_node[seq] = self._root
+        for seq in self._seq_pub:
+            self._seq_pub[seq] = -1  # poison: no re-publish of stale KV
 
     # ------------------------------------------------------------- cache ops
     def step_cache(self) -> dict:

@@ -20,6 +20,16 @@ Two cache backends (``cache=`` / ``launch/serve.py --cache``):
 - ``"slot"``: the legacy slot pool (full-prompt prefill + splice), kept
   one release as the parity baseline.
 
+Prefix caching (paged, ``prefix_cache=True`` default): admission consults
+the pool's refcounted trie (serve/cache.py) and maps a shared prompt
+prefix into the new sequence's block table with increfs — the chunked
+prefill then runs only over the tail, so N tenants sharing a system
+prompt prefill it once.  Divergent writes copy-on-write, the admission
+gate counts new blocks only (higher admitted concurrency at equal cache
+bytes), and a cache-hit sequence is token-identical to a cold one
+(parity-gated in tests/test_prefix_cache.py).  Disabled automatically
+for ring/recurrent families where paged KV is not the whole state.
+
 Numerics: the decode step is row-independent (per-sequence attention/SSM
 state, drop-free MoE routing in decode), so a request's tokens are
 bit-identical whether it shares the batch with 0 or ``num_slots - 1``
@@ -72,7 +82,8 @@ class ServeEngine:
                  prefill_chunk: int = 16, max_pending: int = 0,
                  decode_fn=None, prefill_fn=None, mesh=None,
                  spec=None, verify_fn=None, kv_bits=None,
-                 kv_oracle: bool = False, metrics_window: int = 512):
+                 kv_oracle: bool = False, metrics_window: int = 512,
+                 prefix_cache: bool = True):
         if cache not in ("paged", "slot"):
             raise ValueError(f"cache={cache!r} (want 'paged' or 'slot')")
         if (kv_bits is not None or kv_oracle) and cache != "paged":
@@ -89,7 +100,8 @@ class ServeEngine:
             self.pool = PagedCachePool(model, num_slots, max_len,
                                        block_size=block_size,
                                        num_blocks=num_blocks, mesh=mesh,
-                                       kv_bits=kv_bits, kv_oracle=kv_oracle)
+                                       kv_bits=kv_bits, kv_oracle=kv_oracle,
+                                       prefix_cache=prefix_cache)
             self._prefill = prefill_fn or make_chunked_prefill(model)
             self.prefill_chunk = prefill_chunk
         else:
@@ -128,6 +140,13 @@ class ServeEngine:
         # on runs shorter than the window)
         self._decode_seconds: deque[float] = deque(maxlen=metrics_window)
         self._decode_tokens: deque[int] = deque(maxlen=metrics_window)
+        # prefix-cache observability, same bounded-window discipline:
+        # (cached, replay) per admission -> windowed hit rate; a per-step
+        # sample of the pool's shared-block gauge -> windowed mean
+        self._prefill_launches = 0
+        self._prefix_admit: deque[tuple[int, int]] = deque(
+            maxlen=metrics_window)
+        self._shared_samples: deque[int] = deque(maxlen=metrics_window)
         self._spec_windows = 0
         self._spec_proposed = 0
         self._spec_accepted = 0
@@ -184,17 +203,25 @@ class ServeEngine:
         logits, cache1 = self._prefill(
             self.sparams, jnp.asarray(req.prompt)[None, :], self.pool.max_len)
         self.pool.write(slot, cache1)
+        self._prefill_launches += 1
         return req.select_token(np.asarray(logits)[0, -1]), len(req.prompt), True
 
-    def _admit_paged(self, req: Request, seq: int):
+    def _admit_paged(self, req: Request, seq: int, hit: int = 0):
         """Chunked prefill straight into the sequence's blocks.  Every
-        chunk call has the same shapes — one executable total.  On resume
+        chunk call has the same shapes — one executable total (``start``
+        is data, so a prefix-cache tail starting mid-prompt reuses it
+        too).  ``hit`` tokens were already mapped from the prefix trie by
+        the scheduler (``pool.map_shared``): only the tail is prefilled,
+        beginning at the shared boundary — block-aligned, or one token
+        shy of it when the whole prompt hit and the last block was COW'd
+        at admission (the tail token's logits seed sampling).  On resume
         after preemption the prompt + emitted tokens are replayed (exact
-        recompute) and no new token is emitted."""
+        recompute, minus whatever the trie still holds) and no new token
+        is emitted."""
         replay = req.replay_tokens()
         C = self.prefill_chunk
-        logits, valid = None, 0
-        for lo in range(0, len(replay), C):
+        logits = None
+        for lo in range(hit, len(replay), C):
             piece = replay[lo:lo + C]
             valid = len(piece)
             buf = np.zeros((1, C), np.int32)
@@ -203,6 +230,12 @@ class ServeEngine:
                 self.sparams, self.pool.step_cache(), jnp.asarray(buf),
                 seq, lo, valid)
             self.pool.accept(cache)
+            self._prefill_launches += 1
+        # the whole replay is now fed: record it so completed blocks
+        # publish into the trie for the next tenant
+        self.pool.record_tokens(seq, replay)
+        req.prefix_cached_tokens += hit
+        self._prefix_admit.append((hit, len(replay)))
         if req.output_tokens:  # resume: last emitted token is the next feed
             return req.output_tokens[-1], len(replay), False
         return req.select_token(np.asarray(logits)[0, 0]), len(replay), True
@@ -219,9 +252,9 @@ class ServeEngine:
 
         # 1) admit queued requests into free rows (mid-decode is fine:
         #    running sequences are untouched, their blocks never move)
-        for req, slot in self.scheduler.admissions():
+        for req, slot, hit in self.scheduler.admissions():
             if self.cache_kind == "paged":
-                tok, cached, emitted = self._admit_paged(req, slot)
+                tok, cached, emitted = self._admit_paged(req, slot, hit)
             else:
                 tok, cached, emitted = self._admit_slot(req, slot)
             if emitted:
@@ -243,6 +276,8 @@ class ServeEngine:
             self._occupancy_sum += self.pool.occupancy()
             if self.cache_kind == "paged":
                 self._block_occupancy_sum += self.pool.block_occupancy()
+                if self.pool.prefix_cache:
+                    self._shared_samples.append(self.pool.blocks_shared)
             self._decode_steps += 1
             t_dec = time.perf_counter()
             n_tok = len(events["tokens"])
@@ -479,6 +514,7 @@ class ServeEngine:
                                else req.first_token_step - req.arrival_step),
                 "latency_s": (None if req.finish_time is None
                               else req.finish_time - req.arrival_time),
+                "prefix_cached_tokens": req.prefix_cached_tokens,
             })
         occ = (self._occupancy_sum / self._decode_steps
                if self._decode_steps else 0.0)
@@ -509,6 +545,25 @@ class ServeEngine:
                 if self._decode_steps else 0.0)
             out["block_size"] = self.pool.block_size
             out["num_blocks"] = self.pool.num_blocks
+            out["prefill_launches"] = self._prefill_launches
+            # windowed (metrics_window-bounded, like the latency deques):
+            # hit rate over the last admissions, shared-block gauge mean
+            # over the last decode steps
+            cached = sum(c for c, _ in self._prefix_admit)
+            total = sum(t for _, t in self._prefix_admit)
+            out["prefix_hit_rate"] = cached / total if total else 0.0
+            out["blocks_shared"] = (
+                float(np.mean(self._shared_samples))
+                if self._shared_samples else 0.0)
+            out["prefix_cache"] = {
+                "enabled": self.pool.prefix_cache,
+                "lookups": self.pool.prefix_lookups,
+                "hits": self.pool.prefix_hits,
+                "hit_tokens": self.pool.prefix_hit_tokens,
+                "cow_copies": self.pool.cow_copies,
+                "evictions": self.pool.prefix_evictions,
+                "cached_blocks": self.pool.prefix_cached_blocks,
+            }
             if self.pool.kv_bits is not None:
                 out["kv_bits"] = list(self.pool.kv_bits)
                 out["kv_oracle"] = self.pool.kv_oracle

@@ -57,6 +57,9 @@ class Request:
     arrival_step: int | None = None
     first_token_step: int | None = None
     preemptions: int = 0       # times evicted-and-requeued (paged engine)
+    # replay tokens served from the prefix trie instead of prefill,
+    # summed over (re-)admissions (paged engine, prefix_cache=True)
+    prefix_cached_tokens: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -47,6 +47,9 @@ class ContinuousScheduler:
         self.running: dict[int, RunningSeq] = {}  # row -> sequence
         self.preemptions = 0
         self._order = 0
+        # prefix-cache hooks; identity no-ops for pools without sharing
+        self._cow = getattr(pool, "cow_for_write", lambda *a: True)
+        self._record = getattr(pool, "record_token", lambda *a: None)
 
     # ------------------------------------------------------------------
     @property
@@ -56,24 +59,37 @@ class ContinuousScheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.running)
 
-    def admissions(self) -> list[tuple[Request, int]]:
+    def admissions(self) -> list[tuple[Request, int, int]]:
         """Pop queued requests into free rows (FIFO, head-of-line blocking:
-        a big request never gets overtaken by a small one)."""
+        a big request never gets overtaken by a small one).  Returns
+        ``(request, row, cached)`` triples — ``cached`` is how many replay
+        tokens the prefix trie already holds, mapped into the fresh block
+        table by incref (``pool.map_shared``): the engine prefills only
+        the tail.  The admission gate counts *new* blocks only, so a
+        request whose prompt is mostly shared admits into a pool that
+        could not hold it cold.  The trie is consulted at pop time:
+        requests admitted in the SAME step don't see each other's blocks
+        (they publish after their prefill lands), which staggered
+        arrivals make irrelevant in steady state."""
         admitted = []
+        map_shared = getattr(self.pool, "map_shared", None)
         while self.queue:
             req = self.queue.peek()
+            tokens = req.replay_tokens()
             # headroom watermark: one growth block per running (or just-
             # admitted) sequence, so admitting never sets up an immediate
             # preempt-replay cycle
             if not self.pool.can_admit(
                     req.cache_tokens_needed(),
-                    reserve_blocks=len(self.running) + len(admitted)):
+                    reserve_blocks=len(self.running) + len(admitted),
+                    tokens=tokens):
                 break
             self.queue.pop()
             seq = self.pool.alloc_seq()
+            cached = map_shared(seq, tokens) if map_shared else 0
             ok = self.pool.ensure(seq, req.cache_tokens_needed())
             assert ok, "can_admit promised the blocks"
-            admitted.append((req, seq))
+            admitted.append((req, seq, cached))
         return admitted
 
     def start(self, request: Request, slot: int, first_token: int,
@@ -86,19 +102,27 @@ class ContinuousScheduler:
 
     def advance(self, slot: int, token: int) -> None:
         seq = self.running[slot]
+        # the PREVIOUS token is now fed (its KV write landed this step):
+        # record it so the pool publishes completed blocks into the trie
+        self._record(slot, seq.last_token)
         seq.last_token = token
         seq.cached_len += 1
 
     def reserve_for_decode(self) -> list[Request]:
         """Grow every running sequence by one token's worth of blocks,
         oldest first; preempt-and-requeue the youngest on exhaustion.
-        Returns the preempted requests (already requeued)."""
+        The write position must also be privately owned — a decode into a
+        still-shared block (a preempted sibling's prefix outliving it)
+        copies-on-write first, and a failed copy is handled exactly like
+        block exhaustion.  Returns the preempted requests (already
+        requeued)."""
         preempted: list[Request] = []
         for slot in sorted(self.running, key=lambda s: self.running[s].order):
             if slot not in self.running:  # already preempted this pass
                 continue
             seq = self.running[slot]
-            while not self.pool.ensure(slot, seq.cached_len + 1):
+            while not (self.pool.ensure(slot, seq.cached_len + 1)
+                       and self._cow(slot, seq.cached_len)):
                 victim = max(self.running,
                              key=lambda s: self.running[s].order)
                 preempted.append(self.preempt(victim))
@@ -136,8 +160,18 @@ class ContinuousScheduler:
                                                      seq.cached_len + k + 1):
                     k -= 1  # shrink the window before taking blocks
                 if k > 0 or self.pool.ensure(slot, seq.cached_len + 1):
-                    granted[slot] = k
-                    break
+                    # drafts + verify write [cached_len, cached_len+k+1):
+                    # COW any still-shared block under the window before
+                    # the spec step scatters into it
+                    if not self._cow(slot, seq.cached_len,
+                                     seq.cached_len + k + 1):
+                        k = 0  # treat like exhaustion: shrink, then preempt
+                        if self._cow(slot, seq.cached_len):
+                            granted[slot] = 0
+                            break
+                    else:
+                        granted[slot] = k
+                        break
                 victim = max(self.running,
                              key=lambda s: self.running[s].order)
                 preempted.append(self.preempt(victim))

@@ -1,0 +1,403 @@
+"""Prefix caching over the paged pool: refcounted copy-on-write block
+sharing, the trie admission path, and the parity gate that a cache-hit
+sequence is token-identical to a cold-start run — across model families,
+with quantized KV blocks (int8 + int4 nibble-packed), under preemption,
+and with speculative decoding.  Plus the refcounted-allocator property
+test and the eviction/flush lifecycle."""
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: skip ONLY property tests
+    import types
+
+    st = types.SimpleNamespace(integers=lambda *a, **k: None,
+                               lists=lambda *a, **k: None,
+                               tuples=lambda *a, **k: None)
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.qat import policy_for
+from repro.serve import PagedCachePool, ServeEngine
+from repro.spec import SpecConfig
+from repro.train.serve import (
+    make_chunked_prefill,
+    make_decode_step,
+    make_verify_chunk,
+    quantize_for_serving,
+)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _served(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    sparams = quantize_for_serving(model, model.init(RNG),
+                                   policy_for(model, default_bits=4))
+    return cfg, model, sparams
+
+
+@pytest.fixture(scope="module")
+def glm4():
+    """Shared glm4 model + one chunked-prefill/decode jit cache for the
+    whole module (compile budget)."""
+    cfg, model, sparams = _served("glm4-9b")
+    fns = {"prefill_fn": make_chunked_prefill(model, donate=False),
+           "decode_fn": make_decode_step(model, donate=False)}
+    return cfg, model, sparams, fns
+
+
+def _prompt(cfg, n, seed):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,), 0,
+                                         cfg.vocab_size))
+
+
+def _serve(model, sparams, prompts, gens, *, stagger=1, num_slots=3,
+           max_len=24, block_size=4, prefill_chunk=4, **kw):
+    """Staggered submission (one request per ``stagger`` steps) so later
+    requests see earlier requests' *published* blocks — same-step
+    admissions don't.  Returns (outputs, engine, peak concurrency)."""
+    eng = ServeEngine(model, sparams, num_slots=num_slots, max_len=max_len,
+                      cache="paged", block_size=block_size,
+                      prefill_chunk=prefill_chunk, **kw)
+    rids, sub, peak = [], 0, 0
+    while sub < len(prompts) or eng.scheduler.has_work():
+        while sub < len(prompts) and eng.steps >= sub * stagger:
+            rids.append(eng.submit(prompts[sub], max_new_tokens=gens[sub]))
+            sub += 1
+        eng.step()
+        peak = max(peak, eng.num_running)
+    return [eng.output(r) for r in rids], eng, peak
+
+
+class _FakeKV:
+    """Minimal model stub: 1-layer paged KV, enough for pool-level tests."""
+
+    class cfg:
+        sliding_window = None
+
+    def init_cache(self, batch, max_len, dtype=None):
+        return {"k": jnp.zeros((1, batch, max_len, 1, 2), jnp.float32),
+                "v": jnp.zeros((1, batch, max_len, 1, 2), jnp.float32),
+                "length": jnp.zeros((batch,), jnp.int32)}
+
+
+# ------------------------------------------------------------ parity gates
+@pytest.mark.parametrize("arch", ["glm4-9b", "hymba-1.5b", "rwkv6-1.6b"])
+def test_warm_identical_to_cold_all_families(arch):
+    """THE prefix-cache contract: serving the same prompt again — now hit
+    in the trie — emits exactly the cold-start token stream.  On glm4
+    the hit is real (shared paged KV blocks); hymba (sliding-window ring)
+    and rwkv (O(1) recurrent state) must AUTO-DISABLE sharing, because
+    their per-token state depends on the full history — parity then holds
+    trivially and the gate pins the auto-off."""
+    cfg, model, sparams = _served(arch)
+    P = _prompt(cfg, 10, seed=1)
+    warm, weng, _ = _serve(model, sparams, [P, P, P], [5, 5, 5])
+    cold, _, _ = _serve(model, sparams, [P], [5], prefix_cache=False)
+    assert warm == [cold[0]] * 3
+    if arch == "glm4-9b":
+        assert weng.pool.prefix_cache
+        assert weng.pool.prefix_hit_tokens > 0
+        assert weng.metrics()["prefix_hit_rate"] > 0
+    else:
+        assert not weng.pool.prefix_cache
+        assert weng.pool.prefix_hit_tokens == 0
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_warm_identical_to_cold_quantized_kv(glm4, kv_bits):
+    """Same parity with int8 codes and int4 nibble-packed KV blocks: the
+    trie maps quantized code blocks + their k_scale/v_scale leaves; a
+    hit serves the stored codes bit-for-bit."""
+    cfg, model, sparams, _ = glm4
+    fns = {"prefill_fn": make_chunked_prefill(model, donate=False),
+           "decode_fn": make_decode_step(model, donate=False)}
+    P = _prompt(cfg, 12, seed=2)
+    warm, weng, _ = _serve(model, sparams, [P, P], [6, 6], kv_bits=kv_bits,
+                           **fns)
+    cold, _, _ = _serve(model, sparams, [P], [6], kv_bits=kv_bits,
+                        prefix_cache=False, **fns)
+    assert warm == [cold[0]] * 2
+    assert weng.pool.prefix_hit_tokens > 0
+    assert weng.pool.kv_bits is not None
+
+
+def test_warm_identical_to_cold_under_preemption(glm4):
+    """Scarce blocks + shared prompts: preempt-and-requeue replays reuse
+    the trie and the streams still match an ample no-sharing run exactly.
+    Admission (prompt + watermark) passes all three, but decode growth
+    (3 -> 5 blocks each) outruns the one-block-per-seq reserve: 13
+    distinct blocks wanted (5 + 4 + 4 after sharing) against 10 usable,
+    so preemption genuinely fires *with shared blocks live*."""
+    cfg, model, sparams, fns = glm4
+    P = _prompt(cfg, 8, seed=3)
+    prompts = [P, P, P]
+    want, _, _ = _serve(model, sparams, prompts, [12] * 3, num_slots=3,
+                        max_len=20, prefix_cache=False, **fns)
+    got, eng, _ = _serve(model, sparams, prompts, [12] * 3, num_slots=3,
+                         max_len=20, num_blocks=11, **fns)
+    assert got == want
+    assert eng.scheduler.preemptions > 0  # the scarce pool exercised it
+    pool = eng.pool  # drained pool conserves: free heap + trie == usable
+    assert (len(pool._free_blocks) + len(pool._cached)
+            == pool.num_blocks - 1)
+    assert not pool._refcount
+
+
+def test_divergence_after_shared_prefix(glm4):
+    """B's prompt extends A's: B maps A's full blocks then grows its own
+    tail; C repeats A exactly (block-aligned full hit -> admission COW).
+    All three must match their cold runs — divergence never leaks
+    through a shared block."""
+    cfg, model, sparams, fns = glm4
+    A = _prompt(cfg, 8, seed=4)          # 2 full blocks at bs=4
+    B = np.concatenate([A, _prompt(cfg, 6, seed=5)])
+    warm, eng, _ = _serve(model, sparams, [A, B, A], [5, 5, 5], **fns)
+    for i, p in enumerate([A, B, A]):
+        cold, _, _ = _serve(model, sparams, [p], [5], prefix_cache=False,
+                            **fns)
+        assert warm[i] == cold[0], f"stream {i} diverged"
+    assert eng.pool.cow_copies >= 1      # C's aligned full hit COW'd
+    assert eng.pool.prefix_hit_tokens > 0
+
+
+def test_decoded_blocks_publish_and_hit(glm4):
+    """Blocks completed during DECODE (not just prefill) publish into the
+    trie: B's prompt replays A's prompt + its first emitted tokens and
+    must hit past A's prompt boundary."""
+    cfg, model, sparams, fns = glm4
+    A = _prompt(cfg, 8, seed=6)
+    eng = ServeEngine(model, sparams, num_slots=3, max_len=24,
+                      cache="paged", block_size=4, prefill_chunk=4, **fns)
+    eng.submit(A, max_new_tokens=6)
+    eng.run_until_drained()
+    outs = eng.output(0)
+    # A fed prompt(8) + outs[:5] (the last sampled token is never fed),
+    # so blocks 1-3 (12 tokens) are published; B replays 13 of them
+    B = np.concatenate([A, np.asarray(outs[:5])])
+    before = eng.pool.prefix_hit_tokens
+    eng.submit(B, max_new_tokens=3)
+    eng.run_until_drained()
+    assert eng.pool.prefix_hit_tokens - before >= 12  # hit beyond prompt
+    cold, _, _ = _serve(model, sparams, [B], [3], prefix_cache=False, **fns)
+    assert eng.output(1) == cold[0]
+
+
+def test_spec_draft_with_prefix_sharing(glm4):
+    """Speculative decoding over shared prefixes: drafts write through
+    block tables holding trie-mapped blocks; reserve_for_spec COWs
+    anything still shared under the window, and greedy spec output stays
+    token-identical to plain decode."""
+    cfg, model, sparams, fns = glm4
+    P = _prompt(cfg, 9, seed=7)
+    want, _, _ = _serve(model, sparams, [P, P], [6, 6], **fns)
+    ver = make_verify_chunk(model, donate=False)
+    got, eng, _ = _serve(model, sparams, [P, P], [6, 6], verify_fn=ver,
+                         spec=SpecConfig(k=3, draft_bits=2), **fns)
+    assert got == want
+    assert eng.pool.prefix_hit_tokens > 0
+
+
+# ------------------------------------------------ admission & concurrency
+def test_admission_gate_counts_new_blocks_only(glm4):
+    """A request whose prompt is trie-resident admits into a pool that
+    cannot hold it cold: 7 usable blocks, A holds 4 (12-token prompt +
+    first decode write), so B cold needs 4 + 1 watermark > the 3 free —
+    but trie-shared it needs only 2 new blocks (admission COW + one
+    fresh) + 1 watermark = exactly 3.  With sharing A and B run
+    concurrently; without it B waits for A to finish."""
+    cfg, model, sparams, fns = glm4
+    P = _prompt(cfg, 12, seed=8)
+    kw = dict(num_slots=2, max_len=16, num_blocks=8)  # 7 usable blocks
+    warm, weng, peak_shared = _serve(model, sparams, [P, P], [4, 3], **kw,
+                                     **fns)
+    cold, _, peak_cold = _serve(model, sparams, [P, P], [4, 3],
+                                prefix_cache=False, **kw, **fns)
+    assert warm == cold                      # parity even under pressure
+    assert peak_shared == 2, peak_shared     # B admitted while A runs
+    assert peak_cold == 1, peak_cold         # cold pool can't fit both
+    assert weng.scheduler.preemptions == 0   # fits, no thrash
+
+
+def test_executable_pins_hold_with_sharing(glm4):
+    """Prefix sharing must not mint executables: the tail prefill starts
+    mid-prompt but ``start`` is data, so the ONE chunked-prefill and ONE
+    decode executables hold (the COW copy compiles separately)."""
+    cfg, model, sparams, _ = glm4
+    prefill = make_chunked_prefill(model, donate=False)
+    decode = make_decode_step(model, donate=False)
+    fns = {"prefill_fn": prefill, "decode_fn": decode}
+    P = _prompt(cfg, 8, seed=9)
+    Q = np.concatenate([P, _prompt(cfg, 5, seed=10)])
+    _, eng, _ = _serve(model, sparams, [P, Q, P], [4, 4, 4], **fns)
+    assert eng.pool.prefix_hit_tokens > 0 and eng.pool.cow_copies >= 1
+    assert prefill._cache_size() == 1, "prefix tails recompiled prefill"
+    assert decode._cache_size() == 1, "sharing recompiled decode"
+
+
+# --------------------------------------------------- pool-level lifecycle
+def test_eviction_lru_leaf_first():
+    """Allocation under pressure evicts refcount-0 trie blocks LRU-first
+    and leaf-first; owned blocks never leave."""
+    pool = PagedCachePool(_FakeKV(), 3, max_len=16, block_size=4,
+                          num_blocks=7)  # 6 usable
+    tok_a, tok_b = list(range(8)), list(range(100, 108))
+    sa = pool.alloc_seq()
+    assert pool.ensure(sa, 8)
+    pool.record_tokens(sa, tok_a)
+    pool.free_seq(sa)                       # chain A cached (older)
+    sb = pool.alloc_seq()
+    assert pool.ensure(sb, 8)
+    pool.record_tokens(sb, tok_b)
+    pool.free_seq(sb)                       # chain B cached (newer)
+    assert pool.prefix_cached_blocks == 4 and len(pool._free_blocks) == 2
+    sc = pool.alloc_seq()
+    assert pool.ensure(sc, 12)              # 3 blocks: 2 free + 1 evicted
+    assert pool.prefix_evictions == 1
+    # the victim is chain A's LEAF (LRU chain; its root must survive so
+    # the longest-prefix match still finds A's first block)
+    assert len(pool._match_nodes(tok_a)) == 1
+    assert len(pool._match_nodes(tok_b)) == 2
+    pool.free_seq(sc)
+    assert (len(pool._free_blocks) + len(pool._cached)
+            == pool.num_blocks - 1)
+
+
+def test_flush_prefix_cache_empties_trie():
+    """flush_prefix_cache returns cached blocks to the heap, empties the
+    trie, and later identical prompts are misses (stale-KV safety)."""
+    pool = PagedCachePool(_FakeKV(), 2, max_len=16, block_size=4,
+                          num_blocks=7)
+    s0 = pool.alloc_seq()
+    assert pool.ensure(s0, 8)
+    pool.record_tokens(s0, list(range(8)))
+    pool.free_seq(s0)
+    assert pool.prefix_cached_blocks == 2
+    pool.flush_prefix_cache()
+    assert pool.prefix_cached_blocks == 0
+    assert not pool._root.children and not pool._node_of
+    assert len(pool._free_blocks) == pool.num_blocks - 1
+    assert pool.map_shared(pool.alloc_seq(), list(range(8))) == 0  # miss
+
+
+def test_hot_swap_flushes_engine_trie(glm4):
+    """autotune.deploy.hot_swap drops the trie: post-swap requests must
+    never hit KV blocks computed under the old weight policy."""
+    from repro.autotune.deploy import hot_swap
+
+    cfg, model, sparams, fns = glm4
+    P = _prompt(cfg, 8, seed=11)
+    eng = ServeEngine(model, sparams, num_slots=2, max_len=16,
+                      cache="paged", block_size=4, prefill_chunk=4, **fns)
+    eng.submit(P, max_new_tokens=3)
+    eng.run_until_drained()
+    assert eng.pool.prefix_cached_blocks > 0
+    report = hot_swap(eng, sparams)
+    assert report["prefix_cache_flushed"]
+    assert eng.pool.prefix_cached_blocks == 0
+    assert not eng.pool._root.children
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_cow_preserves_block_contents_bitwise(kv_bits):
+    """COW must copy codes AND scale leaves bit-for-bit — int8 codes,
+    int4 nibble-packed uint8, and the f32 k_scale/v_scale riders."""
+    pool = PagedCachePool(_FakeKV(), 2, max_len=8, block_size=4,
+                          num_blocks=4, kv_bits=kv_bits)
+    s0 = pool.alloc_seq()
+    assert pool.ensure(s0, 8)
+    toks = list(range(8))
+    pool.record_tokens(s0, toks)            # publish both blocks
+    rng = np.random.default_rng(0)
+    for key in pool.paged_keys:             # k, v, k_scale, v_scale
+        leaf = pool.cache[key]
+        pat = rng.integers(1, 100, leaf.shape).astype(leaf.dtype)
+        pool.cache[key] = jnp.asarray(pat)
+    s1 = pool.alloc_seq()
+    old = list(pool._seq_blocks[s0])
+    cached = pool.map_shared(s1, toks)      # aligned full hit -> COW
+    assert cached == 7 and pool.cow_copies == 1
+    new = pool._seq_blocks[s1]
+    assert new[0] == old[0] and new[1] != old[1]
+    for key in pool.paged_keys:
+        got = np.asarray(pool.cache[key][:, new[1]])
+        want = np.asarray(pool.cache[key][:, old[1]])
+        np.testing.assert_array_equal(got, want, err_msg=key)
+    # both copies now privately owned: the write path touches only s1's
+    assert pool._refcount[old[1]] == 1 and pool._refcount[new[1]] == 1
+
+
+# ------------------------------------------- refcounted allocator property
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=st.lists(st.tuples(st.integers(0, 9), st.integers(0, 5)),
+                 min_size=1, max_size=50),
+)
+def test_refcounted_allocator_invariants(ops):
+    """Arbitrary share/fork/grow/free traffic: refcounts exactly mirror
+    ownership (one count per owning sequence, never negative), shared
+    blocks never reach the free heap, conservation holds after every op,
+    and the pool drains back to its initial state."""
+    pool = PagedCachePool(_FakeKV(), 3, max_len=16, block_size=4,
+                          num_blocks=9)  # 8 usable
+    # three token streams with shared prefixes -> real trie collisions
+    streams = [list(range(16)), list(range(8)) + list(range(50, 58)),
+               list(range(200, 216))]
+    live: dict[int, list[int]] = {}  # seq -> its recorded tokens
+    for op, arg in ops:
+        if op <= 3:                            # admit (map + ensure)
+            toks = streams[arg % 3][:4 + 4 * (arg % 3)]
+            if not (pool.num_free and pool.can_admit(len(toks), 0, toks)):
+                continue
+            seq = pool.alloc_seq()
+            pool.map_shared(seq, toks)
+            if pool.ensure(seq, len(toks) + 1):
+                pool.record_tokens(seq, toks)
+                live[seq] = list(toks)
+            else:                               # exhausted: roll back
+                pool.free_seq(seq)
+        elif op <= 5 and live:                 # grow + record one token
+            seq = sorted(live)[arg % len(live)]
+            if (len(live[seq]) < 16
+                    and pool.ensure(seq, len(live[seq]) + 1)):
+                tok = 300 + (arg * 7 + len(live[seq])) % 5  # forks streams
+                pool.record_token(seq, tok)
+                live[seq].append(tok)
+        elif op <= 7 and live:                 # divergent write -> COW
+            seq = sorted(live)[arg % len(live)]
+            pool.cow_for_write(seq, max(len(live[seq]) - 1, 0))
+        elif live:                             # retire
+            seq = sorted(live)[arg % len(live)]
+            pool.free_seq(seq)
+            del live[seq]
+        # ---- invariants after every op
+        owned = Counter(b for s in pool._seq_blocks.values() for b in s)
+        assert dict(owned) == pool._refcount   # counts mirror ownership
+        assert all(c >= 1 for c in pool._refcount.values())
+        assert 0 not in owned                  # garbage block never owned
+        heap, cached = set(pool._free_blocks), set(pool._cached)
+        assert not (heap & set(owned)) and not (cached & set(owned))
+        assert not (heap & cached)
+        assert (len(set(owned)) + len(heap) + len(cached)
+                == pool.num_blocks - 1)        # conservation
+    for seq in list(live):
+        pool.free_seq(seq)
+    assert not pool._refcount
+    assert (len(pool._free_blocks) + len(pool._cached)
+            == pool.num_blocks - 1)
+    pool.flush_prefix_cache()                  # full drain: initial state
+    assert len(pool._free_blocks) == pool.num_blocks - 1
+    assert pool.num_free == pool.num_seqs and not pool._node_of

@@ -279,6 +279,48 @@ def test_allocator_errors_and_garbage_block():
                        num_blocks=2)          # < one full sequence
 
 
+def test_shared_block_free_decrefs_never_frees():
+    """Freeing a sequence whose blocks are shared (refcount > 1) must
+    DECREF them — a shared block on the free heap would let a third
+    sequence overwrite KV another sequence still reads.  Only the last
+    owner parks it in the trie (evictable), and over-freeing raises the
+    same ValueError as any double free."""
+
+    class _FakeModel:
+        class cfg:
+            sliding_window = None
+
+        def init_cache(self, batch, max_len, dtype=None):
+            return {"k": jnp.zeros((1, batch, max_len, 1, 2), jnp.float32),
+                    "v": jnp.zeros((1, batch, max_len, 1, 2), jnp.float32),
+                    "length": jnp.zeros((batch,), jnp.int32)}
+
+    pool = PagedCachePool(_FakeModel(), 2, max_len=16, block_size=4,
+                          num_blocks=7)  # 6 usable
+    toks = list(range(8))  # two full blocks of content
+    s0 = pool.alloc_seq()
+    assert pool.ensure(s0, 8)
+    pool.record_tokens(s0, toks)          # publish both blocks
+    s1 = pool.alloc_seq()
+    assert pool.map_shared(s1, toks + [9]) == 8  # incref, no COW cap
+    shared = list(pool._seq_blocks[s0])
+    assert pool._seq_blocks[s1] == shared
+    assert all(pool._refcount[b] == 2 for b in shared)
+    pool.free_seq(s0)                     # first owner gone: decref only
+    assert all(pool._refcount[b] == 1 for b in shared)
+    assert not (set(shared) & set(pool._free_blocks))
+    assert not (set(shared) & set(pool._cached))
+    with pytest.raises(ValueError):
+        pool.free_seq(s0)                 # double free still raises
+    pool.free_seq(s1)                     # last owner: park in the trie
+    assert set(shared) <= set(pool._cached)
+    assert not (set(shared) & set(pool._free_blocks))
+    with pytest.raises(ValueError):
+        pool._decref(shared[0])           # block-level over-free raises
+    # conservation: free heap + cached == usable
+    assert len(pool._free_blocks) + len(pool._cached) == pool.num_blocks - 1
+
+
 # ------------------------------------------------------------- speculation
 @pytest.mark.parametrize("arch", ["glm4-9b", "hymba-1.5b", "rwkv6-1.6b"])
 def test_spec_greedy_parity_all_families(arch):
