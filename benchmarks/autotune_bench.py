@@ -147,8 +147,11 @@ def bench(args) -> dict:
           f"{a['stale_dropped']} stale dropped)", flush=True)
 
     speedup = a["episodes_per_s"] / max(lock["episodes_per_s"], 1e-9)
+    from repro.obs import run_provenance
+
     rec = {
         "benchmark": "autotune_bench",
+        "provenance": run_provenance(),
         "env": {"groups": 4, "bitset": 7, "eval_ms": args.eval_ms,
                 "episodes": args.episodes, "seed": args.seed},
         "lockstep": lock, "async": a,

@@ -19,6 +19,10 @@ os.makedirs(RESULTS, exist_ok=True)
 
 
 def _dump(name: str, obj):
+    from repro.obs import run_provenance
+
+    if isinstance(obj, dict):
+        obj = {"provenance": run_provenance(), **obj}
     with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=2, default=float)
 

@@ -81,7 +81,14 @@ share one jit cache per policy; a warmup pass runs before timing.
   baseline_peak, num_blocks, kv_bytes}`` — shared peak strictly above
   the ``prefix_cache=False`` baseline at equal cache bytes — and the
   section's tenant/prompt geometry,
-- ``speculative``: per draft-bitwidth acceptance/speedup medians.
+- ``speculative``: per draft-bitwidth acceptance/speedup medians,
+- ``observability``: ``overhead`` (median enabled/disabled tokens-per-s
+  ratio, the ``>= 0.97`` tracing-overhead gate) + ``smoke_trace``
+  (event/drop counts, recompiles-after-warmup, span names, device/host
+  p50 of the traced multi-tenant speculative run; the Chrome trace
+  itself lands in ``results/trace_smoke.json``),
+- ``provenance``: git sha / timestamp / jax version / device count
+  (``repro.obs.run_provenance``) stamped on every record.
 """
 from __future__ import annotations
 
@@ -97,6 +104,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.obs import run_provenance
+from repro.obs.trace import Tracer
 from repro.quant.qat import policy_for
 from repro.serve import ServeEngine
 from repro.spec import SpecConfig, snap_params_to_grid
@@ -628,6 +637,135 @@ def run_spec(args) -> dict:
     return out
 
 
+def run_obs_gate(model, cfg, args, sparams, trace_path: str | None) -> dict:
+    """Observability section: the tracing-overhead gate plus a traced
+    multi-tenant speculative smoke run exported as a Chrome-trace file.
+
+    - **overhead gate**: tokens/s with a live ``Tracer`` + registry must
+      stay within 3% of the tracing-disabled engine (``span()`` on a
+      disabled tracer is one attribute check; instrument observes are a
+      lock + float add).  Same noise discipline as the paged-vs-slot
+      gate: time-adjacent order-rotated pairs, MEDIAN per-pair ratio
+      over ``--gate-trials`` pairs.
+    - **smoke trace**: two tenants sharing a system prompt, staggered
+      arrivals, speculative decoding on — the full acceptance scenario —
+      traced end to end and saved to ``trace_smoke.json`` (CI uploads
+      it; open at ui.perfetto.dev).  Asserts the trace is *balanced*
+      (zero open spans after the drain), shows ZERO ``xla.compile``
+      events after warmup, attributes every decode step into device vs
+      host time, and round-trips as valid Chrome-trace JSON (every
+      event carries name/ph/ts/pid/tid; X events carry dur).
+    """
+    n_gate = max(args.requests, 24)
+    gen_gate = max(args.gen, 48)
+    prompts, gens = make_workload(n_gate, args.prompt_len, gen_gate,
+                                  cfg.vocab_size, seed=13)
+    max_len = args.prompt_len + gen_gate + 1
+    prefill_fn = make_chunked_prefill(model, donate=False)
+    decode_fn = make_decode_step(model, donate=False)
+
+    def drive(tracer):
+        eng = ServeEngine(model, sparams, num_slots=args.batch,
+                          max_len=max_len, cache="paged",
+                          block_size=args.block_size,
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_fn=prefill_fn, decode_fn=decode_fn,
+                          tracer=tracer)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, int(g) + 1)
+        m = eng.run_until_drained()
+        return m["tokens_per_s"]
+
+    for kind in ("off", "on"):  # warmup: compiles land outside timing
+        drive(Tracer(enabled=True) if kind == "on" else None)
+    pair_ratios = []
+    for t in range(args.gate_trials):
+        order = ("off", "on") if t % 2 == 0 else ("on", "off")
+        pair = {}
+        for kind in order:
+            pair[kind] = drive(Tracer(enabled=True) if kind == "on"
+                               else None)
+        pair_ratios.append(pair["on"] / pair["off"])
+    median = sorted(pair_ratios)[len(pair_ratios) // 2]
+    out: dict = {"overhead": {
+        "ratio": round(median, 4),
+        "pair_ratios": [round(r, 4) for r in pair_ratios],
+        "trials": args.gate_trials, "requests": n_gate, "gen": gen_gate,
+    }}
+    assert median >= 0.97, (
+        f"tracing-overhead gate: median enabled/disabled tokens-per-s "
+        f"ratio {median:.4f} < 0.97 (3% budget) — {out}")
+
+    # --- traced multi-tenant speculative smoke run
+    bs = args.block_size
+    S, plen, gen, n = 2 * bs, 3 * bs, 16, 6
+    rng = np.random.default_rng(17)
+    sys_prompts = rng.integers(0, cfg.vocab_size, (2, S))
+    sprompts = rng.integers(0, cfg.vocab_size, (n, plen))
+    for i in range(n):
+        sprompts[i, :S] = sys_prompts[i % 2]
+    smax_len = plen + gen + 1
+    pf = make_chunked_prefill(model, donate=False)
+    df = make_decode_step(model, donate=False)
+    vf = make_verify_chunk(model, donate=False)
+
+    def smoke(tracer):
+        eng = ServeEngine(model, sparams, num_slots=4, max_len=smax_len,
+                          cache="paged", block_size=bs,
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_fn=pf, decode_fn=df, verify_fn=vf,
+                          spec=SpecConfig(k=4, draft_bits=4),
+                          tracer=tracer)
+        submitted = 0
+        while submitted < n or eng.scheduler.has_work():
+            while submitted < n and eng.steps >= 2 * submitted:
+                eng.submit(sprompts[submitted], gen + 1)
+                submitted += 1
+            eng.step()
+        return eng
+
+    smoke(None)  # warmup: draft/verify/prefill compiles land here
+    tracer = Tracer(enabled=True)
+    tracer.name_thread("serve-loop")
+    eng = smoke(tracer)
+    m = eng.metrics()
+    assert m["recompiles"] == 0, (
+        f"smoke trace saw {m['recompiles']} xla.compile events after "
+        f"warmup — steady-state serving must not recompile")
+    assert tracer.depth() == 0, (
+        f"unbalanced trace: {tracer.depth()} spans still open after "
+        f"the drain")
+    names = {e["name"] for e in tracer.events()}
+    for want in ("queue.wait", "admit", "prefill.chunk", "decode.step",
+                 "spec.draft", "spec.verify", "spec.resolve"):
+        assert want in names, f"smoke trace missing {want!r} spans: {names}"
+    assert "decode_device_p50_ms" in m and "decode_host_p50_ms" in m, m
+    doc = tracer.to_chrome()
+    for ev in doc["traceEvents"]:  # schema check, then round-trip
+        for key in ("name", "ph", "pid", "tid"):
+            assert key in ev, ev
+        assert ev["ph"] in ("X", "i", "M"), ev
+        if ev["ph"] == "X":
+            assert "dur" in ev and "ts" in ev, ev
+    json.loads(json.dumps(doc))
+    out["smoke_trace"] = {
+        "events": tracer.num_events,
+        "dropped": tracer.dropped,
+        "span_names": sorted(names),
+        "recompiles": m["recompiles"],
+        "spec_acceptance": round(m["spec"]["acceptance_rate"], 3),
+        "prefix_hits": m["prefix_hits"],
+        "prefix_lookups": m["prefix_lookups"],
+        "decode_device_p50_ms": round(m["decode_device_p50_ms"], 3),
+        "decode_host_p50_ms": round(m["decode_host_p50_ms"], 3),
+    }
+    if trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        tracer.save(trace_path)
+        out["smoke_trace"]["path"] = trace_path
+    return out
+
+
 def bench(args):
     """-> (csv rows, (cfg, model, sparams at args.bits[0]) for reuse)."""
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -694,10 +832,13 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None,
                  speculative: dict | None = None,
                  paged_gate: dict | None = None,
                  kv_quant: dict | None = None,
-                 multi_tenant: dict | None = None) -> dict:
+                 multi_tenant: dict | None = None,
+                 observability: dict | None = None) -> dict:
     """Persist the per-bitwidth static/continuous/paged tokens/s plus the
     mixed-prompt-length paged section so the perf trajectory is comparable
-    across PRs (CI uploads this file as an artifact; humans diff it)."""
+    across PRs (CI uploads this file as an artifact; humans diff it).
+    Every record carries a ``provenance`` stamp (git sha, timestamp, jax
+    version, device count) so a perf number stays interpretable."""
     per_bits: dict[str, dict] = {}
     for name, tps, derived in rows:
         mode, b = name.replace("serve_", "").split("@")
@@ -709,6 +850,7 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None,
             d["paged_vs_static"] = round(d["paged"] / d["static"], 3)
     rec = {
         "benchmark": "serve_bench",
+        "provenance": run_provenance(),
         "arch": args.arch, "smoke": bool(args.smoke),
         "requests": args.requests, "batch": args.batch,
         "prompt_len": args.prompt_len, "gen": args.gen,
@@ -725,6 +867,8 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None,
         rec["multi_tenant"] = multi_tenant
     if speculative is not None:
         rec["speculative"] = speculative
+    if observability is not None:
+        rec["observability"] = observability
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -783,6 +927,16 @@ def main() -> None:
     ap.add_argument("--spec-draft-bits", type=int, nargs="+", default=[2, 4],
                     help="draft bitwidths to sweep (weights snapped to the "
                          "cheapest one's grid)")
+    ap.add_argument("--obs", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the observability section (<= 3% tracing-"
+                         "overhead gate + traced multi-tenant spec smoke "
+                         "run exported as a Chrome trace)")
+    ap.add_argument("--trace-out",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "results", "trace_smoke.json"),
+                    help="Chrome-trace path for the smoke run "
+                         "('' disables the file)")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON record path ('' disables)")
     args = ap.parse_args()
@@ -829,6 +983,17 @@ def main() -> None:
           f"vs slot={mixed['slot']['peak_concurrent']} at "
           f"kv_bytes {mixed['paged']['kv_bytes']} <= "
           f"{mixed['slot']['kv_bytes']}", flush=True)
+    obs = None
+    if args.obs:
+        obs = run_obs_gate(model, cfg, args, sparams, args.trace_out)
+        st = obs["smoke_trace"]
+        print(f"observability: tracing overhead ratio "
+              f"{obs['overhead']['ratio']:.4f} >= 0.97, smoke trace "
+              f"{st['events']} events ({st['dropped']} dropped, "
+              f"{st['recompiles']} recompiles), device/host p50 "
+              f"{st['decode_device_p50_ms']:.2f}/"
+              f"{st['decode_host_p50_ms']:.2f} ms"
+              + (f" -> {st['path']}" if "path" in st else ""), flush=True)
     spec = None
     if args.spec:
         spec = run_spec(args)
@@ -845,7 +1010,7 @@ def main() -> None:
     if args.out:
         write_record(args, rows, args.out, paged_mixed=mixed,
                      speculative=spec, paged_gate=gate, kv_quant=kv,
-                     multi_tenant=mt)
+                     multi_tenant=mt, observability=obs)
         print(f"wrote {args.out}", flush=True)
 
 

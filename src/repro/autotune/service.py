@@ -95,8 +95,15 @@ class AutotuneService:
                  ppo_config: PPOConfig | None = None,
                  archive: ParetoArchive | None = None,
                  config: ServiceConfig | None = None,
-                 accuracy_thread_safe: bool = False):
+                 accuracy_thread_safe: bool = False,
+                 registry=None, tracer=None):
+        from repro.obs import Registry, get_logger
+        from repro.obs.trace import NULL_TRACER
+
         self.cfg = config or ServiceConfig()
+        self.obs = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._log = get_logger("autotune")
         self.env = make_env(0)
         self.env.eval_mode = "deferred"
         # prefer the factory's RAW compute + shared cache so the pool is
@@ -109,7 +116,8 @@ class AutotuneService:
         self.pool = EvaluatorPool(
             AccuracyEvaluator(accuracy_fn, cache=cache,
                               thread_safe=accuracy_thread_safe),
-            latency_eval, num_workers=self.cfg.num_workers)
+            latency_eval, num_workers=self.cfg.num_workers,
+            registry=self.obs, tracer=self.tracer)
         objectives = ("acc", "sq", "latency") if latency_eval is not None \
             else ("acc", "sq")
         if archive is not None and "latency" in archive.objectives \
@@ -130,9 +138,27 @@ class AutotuneService:
         self._buffer: list[_Episode] = []
         self._stale_dropped = 0
         self._updates = 0
+        # search-side instruments: evaluator staleness at consumption
+        # (how off-policy the learner actually runs), episode/update
+        # counters, archive level
+        obs = self.obs
+        self._c_episodes = obs.counter("autotune.episodes")
+        self._c_updates = obs.counter("autotune.ppo_updates")
+        self._c_stale = obs.counter("autotune.stale_dropped",
+                                    desc="episodes older than max_staleness")
+        self._h_staleness = obs.histogram(
+            "autotune.staleness", unit="versions",
+            buckets=(0, 1, 2, 3, 5, 8, 13),
+            desc="policy versions between rollout and PPO consumption")
+        self._g_archive = obs.gauge("autotune.archive_size")
 
     # ----------------------------------------------------------- actor
     def _rollout(self, index: int) -> _Episode:
+        with self.tracer.span("episode.rollout", episode=index,
+                              version=self.version):
+            return self._rollout_inner(index)
+
+    def _rollout_inner(self, index: int) -> _Episode:
         env = self.env
         obs = env.reset()
         T, A = env.T, len(env.bitset)
@@ -180,10 +206,14 @@ class AutotuneService:
             return
         fresh = [e for e in self._buffer
                  if self.version - e.version <= self.cfg.max_staleness]
-        self._stale_dropped += len(self._buffer) - len(fresh)
+        dropped = len(self._buffer) - len(fresh)
+        self._stale_dropped += dropped
+        self._c_stale.inc(dropped)
         self._buffer.clear()
         if not fresh:
             return
+        for e in fresh:  # staleness actually consumed by the learner
+            self._h_staleness.observe(self.version - e.version)
         traj = {
             "states": np.stack([e.states for e in fresh]),
             "actions": np.stack([e.actions for e in fresh]),
@@ -191,9 +221,12 @@ class AutotuneService:
             "values": np.stack([e.values for e in fresh]),
             "rewards": np.stack([e.rewards for e in fresh]),
         }
-        self.ppo.update(traj)
+        with self.tracer.span("ppo.update", episodes=len(fresh),
+                              version=self.version, stale_dropped=dropped):
+            self.ppo.update(traj)
         self.version += 1
         self._updates += 1
+        self._c_updates.inc()
 
     # ------------------------------------------------------------- run
     def run(self, episodes: int, log_every: int = 0) -> SearchResult:
@@ -226,11 +259,18 @@ class AutotuneService:
             self.archive.add(ep.bits, acc=res.acc, sq=ep.quant,
                              latency=res.latency, reward=ep.final_reward,
                              meta={"episode": ep.index})
+            self.tracer.instant("archive.add", episode=ep.index,
+                                reward=ep.final_reward, acc=res.acc,
+                                size=len(self.archive))
+            self._c_episodes.inc()
+            self._g_archive.set(len(self.archive))
             self._maybe_update()
             if log_every and completed % log_every == 0:
-                print(f"ep {completed:4d} reward={ep.final_reward:.3f} "
-                      f"acc={res.acc:.3f} quant={ep.quant:.3f} "
-                      f"ver={self.version} archive={len(self.archive)}")
+                self._log.event(
+                    "episode", episode=completed,
+                    reward=ep.final_reward, acc=res.acc, quant=ep.quant,
+                    staleness=self.version - ep.version,
+                    version=self.version, archive=len(self.archive))
 
         while completed < episodes:
             # actor: keep the evaluation window full

@@ -329,9 +329,16 @@ class EvaluatorPool:
     """
 
     def __init__(self, accuracy: AccuracyEvaluator, latency=None, *,
-                 num_workers: int = 4):
+                 num_workers: int = 4, registry=None, tracer=None):
+        from repro.obs import Registry
+        from repro.obs.trace import NULL_TRACER
+
         self.accuracy = accuracy
         self.latency = latency
+        self.obs = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._h_eval = self.obs.histogram("autotune.eval_seconds", unit="s")
+        self._c_acc_hits = self.obs.counter("autotune.acc_cache_hits")
         self.num_workers = max(1, int(num_workers))
         self._ex = ThreadPoolExecutor(
             max_workers=self.num_workers,
@@ -350,17 +357,28 @@ class EvaluatorPool:
             accuracy._lock = self._measure_lock
 
     def _evaluate(self, bits_by_name: dict) -> EvalResult:
+        # worker threads record into the shared tracer concurrently: each
+        # shows up as its own Perfetto track (named after the executor's
+        # thread_name_prefix), spans balance per-thread
+        tr = self.tracer
+        if tr.enabled:
+            tr.name_thread(threading.current_thread().name)
         t0 = time.perf_counter()
-        acc, hit = self.accuracy(bits_by_name)
+        with tr.span("eval.accuracy") as sp:
+            acc, hit = self.accuracy(bits_by_name)
+            sp.set(cache_hit=hit)
+        if hit:
+            self._c_acc_hits.inc()
         lat = ref = None
         if self.latency is not None:
-            with self._measure_lock:
+            with self._measure_lock, tr.span("eval.latency"):
                 lat, ref = self.latency(bits_by_name)
         with self._lock:
             self._completed += 1
+        dt = time.perf_counter() - t0
+        self._h_eval.observe(dt)
         return EvalResult(acc=acc, latency=lat, ref_latency=ref,
-                          acc_cache_hit=hit,
-                          eval_seconds=time.perf_counter() - t0)
+                          acc_cache_hit=hit, eval_seconds=dt)
 
     def submit(self, bits_by_name: dict) -> Future:
         with self._lock:

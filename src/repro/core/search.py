@@ -115,11 +115,15 @@ class ReLeQSearch:
                     result.best_bits = dict(info["bits"])
             result.prob_evolution.append(probs.mean(axis=0))
             if log_every and (ep + 1) % log_every == 0:
+                from repro.obs import get_logger
+
                 last = result.episodes[-1]
-                print(f"ep {ep+1:4d} reward={last['reward']:.3f} "
-                      f"acc={last['acc']:.3f} quant={last['quant']:.3f} "
-                      f"avg_bits={np.mean(list(last['bits'].values())):.2f} "
-                      f"pi_loss={metrics['pi_loss']:.4f}")
+                get_logger("search").event(
+                    "episode", episode=ep + 1,
+                    reward=float(last["reward"]), acc=float(last["acc"]),
+                    quant=float(last["quant"]),
+                    avg_bits=float(np.mean(list(last["bits"].values()))),
+                    pi_loss=float(metrics["pi_loss"]))
         cache = getattr(self.make_env, "eval_cache", None)
         if cache is not None:
             result.cache_stats = cache.stats()

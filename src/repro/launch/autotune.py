@@ -129,7 +129,16 @@ def main():
                              "reward"))
     ap.add_argument("--num-slots", type=int, default=4)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record episode rollouts, evaluator-pool work "
+                         "and PPO updates as a Chrome-trace file")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured logs as JSON lines instead of text")
     args = ap.parse_args()
+
+    if args.log_json:
+        from repro.obs import configure
+        configure(json_mode=True)
 
     if args.task.startswith("cnn:"):
         model, params, factory, groups, frozen = _build_cnn(
@@ -146,15 +155,25 @@ def main():
 
     print(f"\n== async ReLeQ search: {args.episodes} episodes, "
           f"{args.workers} workers, hw={args.hw} ==", flush=True)
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer(enabled=True)
+        tracer.name_thread("actor-learner")
     service = AutotuneService(
         factory, latency_eval=latency_eval, archive=archive,
         config=ServiceConfig(num_workers=args.workers,
                              max_inflight=args.inflight,
                              batch_episodes=args.batch_episodes,
                              max_staleness=args.max_staleness,
-                             hw_weight=args.hw_weight, seed=args.seed))
+                             hw_weight=args.hw_weight, seed=args.seed),
+        tracer=tracer)
     result = service.run(args.episodes, log_every=4)
     service.shutdown()
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote {tracer.num_events} trace events to {args.trace}")
 
     s = result.service_stats
     print(f"\nbest reward {result.best_reward:.4f} "

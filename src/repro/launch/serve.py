@@ -28,6 +28,13 @@ at B bitplanes roll K tokens per window and one batched verify call
 scores them against the full-precision policy — output is distribution-
 exact, so every other flag means the same thing with spec on.  Paged
 cache only.
+
+Observability (``repro.obs``): ``--trace out.json`` records the full
+request lifecycle (queue wait, prefill chunks, decode device/host
+split, spec windows, preempt/COW/evict instants) as a Chrome-trace
+file loadable at ui.perfetto.dev; ``--metrics-interval N`` prints the
+engine's registry snapshot every N steps; ``--log-json`` switches all
+structured logs to JSON lines.
 """
 from __future__ import annotations
 
@@ -86,6 +93,8 @@ def _static(args, cfg, model, sparams, policy):
 
 
 def _continuous(args, cfg, model, sparams, policy):
+    from repro.obs import get_logger
+    from repro.obs.trace import Tracer
     from repro.spec import SpecConfig
 
     max_len = args.prompt_len + args.gen + 1
@@ -96,13 +105,17 @@ def _continuous(args, cfg, model, sparams, policy):
         kv_kw["kv_bits"] = (args.kv_bits[0] if len(args.kv_bits) == 1
                             else args.kv_bits)
         kv_kw["kv_oracle"] = args.kv_oracle
+    tracer = Tracer(enabled=True) if args.trace else None
+    if tracer is not None:
+        tracer.name_thread("serve-loop")
     engine = ServeEngine(model, sparams, num_slots=args.num_slots,
                          max_len=max_len, cache=args.cache,
                          block_size=args.block_size,
                          num_blocks=args.num_blocks,
                          prefill_chunk=args.prefill_chunk,
                          prefix_cache=args.prefix_cache,
-                         spec=spec, **kv_kw)
+                         spec=spec, tracer=tracer, **kv_kw)
+    mlog = get_logger("serve.metrics")
     rng = np.random.default_rng(1)
     gens = [int(g) for g in
             rng.integers(max(1, args.gen // 2), args.gen + 1, args.requests)]
@@ -126,6 +139,13 @@ def _continuous(args, cfg, model, sparams, policy):
                           sampling=sampling)
             submitted += 1
         engine.step()
+        if args.metrics_interval and engine.steps % args.metrics_interval == 0:
+            m = engine.metrics()
+            mlog.event("snapshot", step=engine.steps,
+                       tokens=m["tokens_total"],
+                       tokens_per_s=m["tokens_per_s"],
+                       queued=engine.num_queued, running=engine.num_running,
+                       recompiles=m["recompiles"])
     m = engine.metrics()
     print(f"served {args.requests} requests on {args.num_slots} "
           f"{args.cache} rows (avg policy {policy.average_bits():.1f} bits)")
@@ -138,6 +158,7 @@ def _continuous(args, cfg, model, sparams, policy):
         pc = m["prefix_cache"]
         print(f"prefix_cache={'on' if pc['enabled'] else 'off'} "
               f"hit_rate={m['prefix_hit_rate']:.3f} "
+              f"hits={m['prefix_hits']}/{m['prefix_lookups']} lookups "
               f"blocks_shared={m['blocks_shared']:.1f} "
               f"prefill_launches={m['prefill_launches']} "
               f"hit_tokens={pc['hit_tokens']} cow={pc['cow_copies']} "
@@ -153,6 +174,11 @@ def _continuous(args, cfg, model, sparams, policy):
               f"ttft={r['ttft_steps']} steps / {r['ttft_s'] * 1e3:.0f} ms, "
               f"latency={r['latency_s'] * 1e3:.0f} ms")
     print("first sequence:", engine.output(0))
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote {tracer.num_events} trace events "
+              f"({tracer.dropped} dropped) to {args.trace} — open at "
+              f"ui.perfetto.dev or chrome://tracing")
 
 
 def main():
@@ -213,8 +239,21 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="continuous mode: record a Chrome-trace of the "
+                         "run (queue wait, prefill chunks, decode "
+                         "device/host split, spec windows, preempt/COW/"
+                         "evict instants) — open at ui.perfetto.dev")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="continuous mode: log a registry snapshot line "
+                         "every N engine steps (0 = off)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured logs as JSON lines instead of text")
     args = ap.parse_args()
 
+    if args.log_json:
+        from repro.obs import configure
+        configure(json_mode=True)
     cfg, model, sparams, policy = _build(args)
     if args.mode == "static":
         _static(args, cfg, model, sparams, policy)

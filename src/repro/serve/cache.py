@@ -99,6 +99,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import cache_batch_axis
+from repro.obs.trace import NULL_TRACER
 
 PAGED_KEYS = ("k", "v")  # transformer KV pages; everything else is O(1)/seq
 
@@ -120,6 +121,8 @@ _splice_jit = jax.jit(_splice, donate_argnums=(0,))
 
 class SlotCachePool:
     """Legacy slot-granular pool: one max_len-sized cache row per sequence."""
+
+    tracer = NULL_TRACER  # engine-assigned trace sink (no slot instants yet)
 
     def __init__(self, model, num_slots: int, max_len: int, dtype=None,
                  mesh=None):
@@ -284,6 +287,10 @@ class PagedCachePool:
                   not the whole per-token state and skipping prefill
                   would change tokens, not just waste work.
     """
+
+    # trace sink for COW / eviction / flush instants; the engine points
+    # this at its tracer (class default stays a shared disabled tracer)
+    tracer = NULL_TRACER
 
     def __init__(self, model, num_seqs: int, max_len: int, *,
                  block_size: int = 16, num_blocks: int | None = None,
@@ -543,6 +550,7 @@ class PagedCachePool:
         del self._cached[blk]
         self._detach(node)
         self.prefix_evictions += 1
+        self.tracer.instant("prefix.evict", block=blk, depth=node.depth)
         return blk
 
     def _detach(self, node: _PrefixNode) -> None:
@@ -747,6 +755,7 @@ class PagedCachePool:
             self.block_tables[seq, i] = new
             self._bt_dirty = True
             self.cow_copies += 1
+            self.tracer.instant("cow", seq=seq, src=blk, dst=new)
         return True
 
     def flush_prefix_cache(self) -> None:
@@ -756,6 +765,7 @@ class PagedCachePool:
         weight hot-swap being the canonical caller via
         ``autotune.deploy.hot_swap``).  Shared mappings stay valid: live
         sequences keep their refcounts and block tables."""
+        self.tracer.instant("prefix.flush", cached_blocks=len(self._cached))
         for blk in self._cached:
             heapq.heappush(self._free_blocks, blk)
         self._cached.clear()

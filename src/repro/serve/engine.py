@@ -53,15 +53,33 @@ Metrics: per-request TTFT (seconds *and* engine steps), wall latency,
 token counts and preemptions, plus aggregate tokens/s, p50/p99 per-step
 decode latency, mean row occupancy, (paged) mean block occupancy, and
 (spec) windows/proposed/accepted counts with the acceptance rate.
+
+Observability (``repro.obs``): every aggregate above lives in a typed
+instrument on the engine's metrics :class:`~repro.obs.Registry`
+(``registry=`` to share one across engines; ``engine.obs.snapshot()``
+is the JSON view) — ``metrics()`` is rebuilt on the registry with
+byte-compatible keys and the same ``metrics_window`` sliding-window
+percentile semantics.  A :class:`~repro.obs.Tracer` (``tracer=``)
+records the full request lifecycle as Chrome-trace spans: queue wait
+(retro-dated to enqueue), admission with prefix hit/replay counts,
+every prefill chunk, each decode step split into **device time**
+(dispatch + logits fetch) vs **host overhead** (sampling/bookkeeping),
+speculative draft/verify/fix-up phases with per-window acceptance,
+preempt instants, pool COW/eviction/flush instants, and an
+``xla.compile`` instant whenever a jit cache grows (``_cache_size``
+delta — steady state must show zero).  Disabled tracing costs one
+attribute check per call site (<= 3%% tokens/s, gated in
+``benchmarks/serve_bench.py``).  See ``docs/metrics.md``.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import Registry
+from repro.obs.trace import NULL_TRACER
 from repro.quant.policy import QuantPolicy
 from repro.serve.cache import PagedCachePool, SlotCachePool
 from repro.serve.queue import AdmissionQueue
@@ -83,7 +101,7 @@ class ServeEngine:
                  decode_fn=None, prefill_fn=None, mesh=None,
                  spec=None, verify_fn=None, kv_bits=None,
                  kv_oracle: bool = False, metrics_window: int = 512,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, registry=None, tracer=None):
         if cache not in ("paged", "slot"):
             raise ValueError(f"cache={cache!r} (want 'paged' or 'slot')")
         if (kv_bits is not None or kv_oracle) and cache != "paged":
@@ -94,6 +112,10 @@ class ServeEngine:
         self.model = model
         self.sparams = sparams
         self.cache_kind = cache
+        # observability: a private registry/disabled tracer by default —
+        # pass shared ones to aggregate across engines or record a trace
+        self.obs = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # mesh != None places the KV pool over the mesh's data axes
         # (repro.dist sharding hook) — decode updates stay shard-local
         if cache == "paged":
@@ -107,8 +129,10 @@ class ServeEngine:
         else:
             self.pool = SlotCachePool(model, num_slots, max_len, mesh=mesh)
             self._prefill = prefill_fn or make_prefill(model)
+        self.pool.tracer = self.tracer  # COW / eviction / flush instants
         self.queue = AdmissionQueue(max_pending)
-        self.scheduler = ContinuousScheduler(self.pool, self.queue)
+        self.scheduler = ContinuousScheduler(self.pool, self.queue,
+                                             registry=self.obs)
         # decode_fn/prefill_fn let callers share one jit cache across
         # engines (the benchmark warms up on a throwaway engine).  The
         # default decode donates the pool cache — step() immediately
@@ -128,28 +152,60 @@ class ServeEngine:
             self._draft_sparams = self._resolve_draft(spec)
         self._next_id = 0
         self._step_idx = 0
-        self._tokens_total = 0
-        self._decode_steps = 0
-        self._occupancy_sum = 0.0
-        self._block_occupancy_sum = 0.0
-        self._run_seconds = 0.0
-        # per-step latency samples for the percentile metrics: bounded ring
-        # buffers (a long-lived engine must not grow host memory without
-        # bound; the percentiles become a sliding window over the last
+        # every aggregate lives on the registry; ``metrics()`` reads the
+        # instruments back with byte-compatible keys.  Latency series are
+        # windowed histograms — bounded host memory on a long-lived
+        # engine, and percentiles are a sliding window over the last
         # ``metrics_window`` decode steps, identical to the full history
-        # on runs shorter than the window)
-        self._decode_seconds: deque[float] = deque(maxlen=metrics_window)
-        self._decode_tokens: deque[int] = deque(maxlen=metrics_window)
+        # on runs shorter than the window (the old deque semantics)
+        obs = self.obs
+        TOK = (1, 4, 16, 64, 256, 1024, 4096)   # token-count boundaries
+        self._c_tokens = obs.counter("serve.tokens_total", unit="tokens")
+        self._c_decode_steps = obs.counter("serve.decode_steps", unit="steps")
+        self._c_run_seconds = obs.counter("serve.run_seconds", unit="s")
+        self._c_occ_sum = obs.counter("serve.occupancy_sum")
+        self._c_block_occ_sum = obs.counter("serve.block_occupancy_sum")
+        self._c_prefill_launches = obs.counter("serve.prefill_launches")
+        self._c_recompiles = obs.counter(
+            "serve.recompiles", desc="jit cache growth after construction")
+        self._h_decode = obs.histogram("serve.decode_step_seconds", unit="s",
+                                       window=metrics_window)
+        self._h_decode_tok = obs.histogram("serve.decode_tok_seconds",
+                                           unit="s", window=metrics_window)
+        self._h_device = obs.histogram("serve.decode_device_seconds",
+                                       unit="s", window=metrics_window)
+        self._h_host = obs.histogram("serve.decode_host_seconds", unit="s",
+                                     window=metrics_window)
+        self._h_queue_wait = obs.histogram("serve.queue_wait_seconds",
+                                           unit="s", window=metrics_window)
         # prefix-cache observability, same bounded-window discipline:
-        # (cached, replay) per admission -> windowed hit rate; a per-step
-        # sample of the pool's shared-block gauge -> windowed mean
-        self._prefill_launches = 0
-        self._prefix_admit: deque[tuple[int, int]] = deque(
-            maxlen=metrics_window)
-        self._shared_samples: deque[int] = deque(maxlen=metrics_window)
-        self._spec_windows = 0
-        self._spec_proposed = 0
-        self._spec_accepted = 0
+        # (hit, replay) token pairs per admission -> windowed hit rate
+        # (appended together, so the two windows stay aligned); a
+        # per-step sample of the pool's shared-block gauge -> window mean
+        self._h_admit_hit = obs.histogram("prefix.admit_hit_tokens",
+                                          unit="tokens", buckets=TOK,
+                                          window=metrics_window)
+        self._h_admit_total = obs.histogram("prefix.admit_replay_tokens",
+                                            unit="tokens", buckets=TOK,
+                                            window=metrics_window)
+        self._h_shared = obs.histogram("prefix.blocks_shared", unit="blocks",
+                                       buckets=TOK, window=metrics_window)
+        self._g_queue = obs.gauge("serve.queue_depth", unit="requests")
+        self._g_running = obs.gauge("serve.running_rows", unit="rows")
+        self._c_spec_windows = obs.counter("spec.windows")
+        self._c_spec_proposed = obs.counter("spec.proposed", unit="tokens")
+        self._c_spec_accepted = obs.counter("spec.accepted", unit="tokens")
+        # device time inside the current step, accumulated by the decode/
+        # spec paths and split out of the step wall time by ``step()``
+        self._device_seconds = 0.0
+        # jit-cache baselines for compile/recompile detection (a shared
+        # pre-warmed fn starts above zero; only *growth* is an event)
+        self._exec_sizes: dict[str, int] = {}
+        for kind, fn in (("prefill", self._prefill), ("decode", self._decode),
+                         ("verify", getattr(self, "_verify", None))):
+            size_fn = getattr(fn, "_cache_size", None)
+            if size_fn is not None:
+                self._exec_sizes[kind] = size_fn()
         self.requests: dict[int, Request] = {}
 
     @classmethod
@@ -197,13 +253,32 @@ class ServeEngine:
     def num_running(self) -> int:
         return self.scheduler.num_running
 
+    def _note_exec(self, kind: str, fn) -> None:
+        """Emit an ``xla.compile`` instant + counter bump when a jit cache
+        grew past its last observed size — steady-state serving must show
+        zero of these after warmup (acceptance-gated in serve_bench)."""
+        size_fn = getattr(fn, "_cache_size", None)
+        if size_fn is None:
+            return
+        sz = size_fn()
+        prev = self._exec_sizes.get(kind, 0)
+        if sz > prev:
+            self._exec_sizes[kind] = sz
+            self._c_recompiles.inc(sz - prev)
+            self.tracer.instant("xla.compile", kind=kind, cache_size=sz,
+                                step=self._step_idx)
+
     # ------------------------------------------------------------- prefill
     def _admit_slot(self, req: Request, slot: int):
         """Legacy path: full-prompt prefill at its exact length + splice."""
-        logits, cache1 = self._prefill(
-            self.sparams, jnp.asarray(req.prompt)[None, :], self.pool.max_len)
-        self.pool.write(slot, cache1)
-        self._prefill_launches += 1
+        with self.tracer.span("prefill.full", request=req.request_id,
+                              tokens=len(req.prompt)):
+            logits, cache1 = self._prefill(
+                self.sparams, jnp.asarray(req.prompt)[None, :],
+                self.pool.max_len)
+            self.pool.write(slot, cache1)
+        self._note_exec("prefill", self._prefill)
+        self._c_prefill_launches.inc()
         return req.select_token(np.asarray(logits)[0, -1]), len(req.prompt), True
 
     def _admit_paged(self, req: Request, seq: int, hit: int = 0):
@@ -226,16 +301,20 @@ class ServeEngine:
             valid = len(piece)
             buf = np.zeros((1, C), np.int32)
             buf[0, :valid] = piece
-            logits, cache = self._prefill(
-                self.sparams, self.pool.step_cache(), jnp.asarray(buf),
-                seq, lo, valid)
-            self.pool.accept(cache)
-            self._prefill_launches += 1
+            with self.tracer.span("prefill.chunk", seq=seq, start=lo,
+                                  valid=valid, request=req.request_id):
+                logits, cache = self._prefill(
+                    self.sparams, self.pool.step_cache(), jnp.asarray(buf),
+                    seq, lo, valid)
+                self.pool.accept(cache)
+            self._note_exec("prefill", self._prefill)
+            self._c_prefill_launches.inc()
         # the whole replay is now fed: record it so completed blocks
         # publish into the trie for the next tenant
         self.pool.record_tokens(seq, replay)
         req.prefix_cached_tokens += hit
-        self._prefix_admit.append((hit, len(replay)))
+        self._h_admit_hit.observe(hit)
+        self._h_admit_total.observe(len(replay))
         if req.output_tokens:  # resume: last emitted token is the next feed
             return req.output_tokens[-1], len(replay), False
         return req.select_token(np.asarray(logits)[0, 0]), len(replay), True
@@ -247,16 +326,26 @@ class ServeEngine:
         "preempted": [ids]}``.
         """
         t0 = time.perf_counter()
+        tr = self.tracer
         events = {"admitted": [], "tokens": [], "finished": [],
                   "preempted": []}
 
         # 1) admit queued requests into free rows (mid-decode is fine:
         #    running sequences are untouched, their blocks never move)
         for req, slot, hit in self.scheduler.admissions():
-            if self.cache_kind == "paged":
-                tok, cached, emitted = self._admit_paged(req, slot, hit)
-            else:
-                tok, cached, emitted = self._admit_slot(req, slot)
+            wait = time.perf_counter() - req.queued_time
+            self._h_queue_wait.observe(wait)
+            tr.complete("queue.wait", start=req.queued_time, dur=wait,
+                        request=req.request_id,
+                        requeued=req.preemptions > 0)
+            with tr.span("admit", request=req.request_id, seq=slot,
+                         prefix_hit_tokens=hit) as sp:
+                if self.cache_kind == "paged":
+                    tok, cached, emitted = self._admit_paged(req, slot, hit)
+                else:
+                    tok, cached, emitted = self._admit_slot(req, slot)
+                sp.set(replay_tokens=cached,
+                       new_tokens=cached - hit)
             if emitted:
                 self._emit(req, tok, events)
             events["admitted"].append(req.request_id)
@@ -269,27 +358,46 @@ class ServeEngine:
         if self.cache_kind == "paged" and self.spec is None:
             for req in self.scheduler.reserve_for_decode():
                 events["preempted"].append(req.request_id)
+                tr.instant("preempt", request=req.request_id,
+                           step=self._step_idx)
 
         # 3) one packed decode step (or speculative window) over every
         #    running row
         if self.scheduler.running:
-            self._occupancy_sum += self.pool.occupancy()
+            self._c_occ_sum.inc(self.pool.occupancy())
             if self.cache_kind == "paged":
-                self._block_occupancy_sum += self.pool.block_occupancy()
+                self._c_block_occ_sum.inc(self.pool.block_occupancy())
                 if self.pool.prefix_cache:
-                    self._shared_samples.append(self.pool.blocks_shared)
-            self._decode_steps += 1
+                    self._h_shared.observe(self.pool.blocks_shared)
+            self._c_decode_steps.inc()
+            self._device_seconds = 0.0
             t_dec = time.perf_counter()
             n_tok = len(events["tokens"])
-            if self.spec is not None:
-                self._spec_step(events)
-            else:
-                self._decode_once(events)
-            self._decode_seconds.append(time.perf_counter() - t_dec)
-            self._decode_tokens.append(len(events["tokens"]) - n_tok)
+            with tr.span("decode.step", step=self._step_idx,
+                         rows=len(self.scheduler.running),
+                         mode="spec" if self.spec is not None
+                         else "decode") as sp:
+                if self.spec is not None:
+                    self._spec_step(events)
+                else:
+                    self._decode_once(events)
+                emitted = len(events["tokens"]) - n_tok
+                sp.set(tokens=emitted)
+            dt = time.perf_counter() - t_dec
+            self._h_decode.observe(dt)
+            if emitted > 0:  # every live path emits >= 1/row; see metrics()
+                self._h_decode_tok.observe(dt / emitted)
+            # device/host attribution: the decode/spec path accumulates
+            # jit-dispatch + logits-fetch time into _device_seconds; the
+            # remainder of the step body is host overhead (sampling,
+            # bookkeeping, table uploads) — the ~3x PR 5 found hid here
+            self._h_device.observe(self._device_seconds)
+            self._h_host.observe(max(dt - self._device_seconds, 0.0))
 
         self._step_idx += 1
-        self._run_seconds += time.perf_counter() - t0
+        self._g_queue.set(len(self.queue))
+        self._g_running.set(self.scheduler.num_running)
+        self._c_run_seconds.inc(time.perf_counter() - t0)
         return events
 
     def _decode_once(self, events: dict) -> None:
@@ -297,17 +405,23 @@ class ServeEngine:
         toks = np.zeros((self.pool.num_slots, 1), np.int32)
         for slot, seq in self.scheduler.running.items():
             toks[slot, 0] = seq.last_token
-        logits, cache = self._decode(
-            self.sparams, self.pool.step_cache(), jnp.asarray(toks))
-        self.pool.accept(cache)
-        rows = np.asarray(logits[:, -1])  # (num_slots, V)
-        for slot, seq in list(self.scheduler.running.items()):
-            tok = seq.request.select_token(rows[slot])
-            self._emit(seq.request, tok, events)
-            if seq.request.done:
-                self._finish(self.scheduler.finish(slot), events)
-            else:
-                self.scheduler.advance(slot, tok)
+        t_dev = time.perf_counter()
+        with self.tracer.span("decode.device",
+                              rows=len(self.scheduler.running)):
+            logits, cache = self._decode(
+                self.sparams, self.pool.step_cache(), jnp.asarray(toks))
+            self.pool.accept(cache)
+            rows = np.asarray(logits[:, -1])  # (num_slots, V) — blocks here
+        self._device_seconds += time.perf_counter() - t_dev
+        self._note_exec("decode", self._decode)
+        with self.tracer.span("decode.host"):
+            for slot, seq in list(self.scheduler.running.items()):
+                tok = seq.request.select_token(rows[slot])
+                self._emit(seq.request, tok, events)
+                if seq.request.done:
+                    self._finish(self.scheduler.finish(slot), events)
+                else:
+                    self.scheduler.advance(slot, tok)
 
     # ------------------------------------------------------------ spec path
     def _spec_step(self, events: dict) -> None:
@@ -349,6 +463,8 @@ class ServeEngine:
         granted, preempted = sched.reserve_for_spec(want)
         for req in preempted:
             events["preempted"].append(req.request_id)
+            self.tracer.instant("preempt", request=req.request_id,
+                                step=self._step_idx)
         if not sched.running:
             return
         max_k = max(granted.values())
@@ -373,32 +489,38 @@ class ServeEngine:
         # upload one device array per DISTINCT mask, not one per depth —
         # in the common all-rows-full-window case that is a single upload
         bt_key, bt_dev = None, None
-        for depth in range(1, max_k + 1):
-            cache_d = dict(pool.cache)
-            bt = pool.block_tables.copy()
-            for slot in range(B):
-                if granted.get(slot, 0) < depth:
-                    bt[slot] = 0  # garbage sink: this row sits this one out
-            key = bt.tobytes()
-            # re-upload if the mask changed OR a donating backend consumed
-            # the previous buffer (CPU ignores donation; accelerators don't)
-            if key != bt_key or bt_dev.is_deleted():
-                bt_key, bt_dev = key, jnp.asarray(bt)
-            cache_d["block_tables"] = bt_dev
-            logits, cache = self._decode(self._draft_sparams, cache_d,
-                                         jnp.asarray(cur))
-            pool.accept(cache)
-            rows = np.asarray(logits[:, -1])
-            for slot, seq in sched.running.items():
-                if granted[slot] < depth:
-                    continue
-                req = seq.request
-                pos = len(req.output_tokens) + depth - 1
-                tok, q = draft_token(rows[slot], req.sampling,
-                                     req.rng_for(pos, KIND_DRAFT))
-                draft_toks[slot].append(tok)
-                q_probs[slot].append(q)
-                cur[slot, 0] = tok
+        with self.tracer.span("spec.draft", max_k=max_k,
+                              rows=len(sched.running)):
+            for depth in range(1, max_k + 1):
+                cache_d = dict(pool.cache)
+                bt = pool.block_tables.copy()
+                for slot in range(B):
+                    if granted.get(slot, 0) < depth:
+                        bt[slot] = 0  # garbage sink: row sits this one out
+                key = bt.tobytes()
+                # re-upload if the mask changed OR a donating backend ate
+                # the previous buffer (CPU ignores donation; accelerators
+                # don't)
+                if key != bt_key or bt_dev.is_deleted():
+                    bt_key, bt_dev = key, jnp.asarray(bt)
+                cache_d["block_tables"] = bt_dev
+                t_dev = time.perf_counter()
+                logits, cache = self._decode(self._draft_sparams, cache_d,
+                                             jnp.asarray(cur))
+                pool.accept(cache)
+                rows = np.asarray(logits[:, -1])
+                self._device_seconds += time.perf_counter() - t_dev
+                for slot, seq in sched.running.items():
+                    if granted[slot] < depth:
+                        continue
+                    req = seq.request
+                    pos = len(req.output_tokens) + depth - 1
+                    tok, q = draft_token(rows[slot], req.sampling,
+                                         req.rng_for(pos, KIND_DRAFT))
+                    draft_toks[slot].append(tok)
+                    q_probs[slot].append(q)
+                    cur[slot, 0] = tok
+        self._note_exec("decode", self._decode)
 
         # --- verify: ONE batched fixed-shape chunk over every pool row.
         # Width is always spec.k + 1 (short windows pad with valid < C),
@@ -419,25 +541,35 @@ class ServeEngine:
             cache_v[key] = jnp.copy(snap[key])
         cache_v["block_tables"] = bt_full
         ver_toks_dev, starts_dev = jnp.asarray(ver_toks), jnp.asarray(starts)
-        logits, cache = self._verify(
-            self.sparams, cache_v, ver_toks_dev, starts_dev,
-            jnp.asarray(valids))
-        pool.accept(cache)
-        target = np.asarray(logits)  # (B, C, V) float32
+        t_dev = time.perf_counter()
+        with self.tracer.span("spec.verify", rows=len(sched.running),
+                              width=C):
+            logits, cache = self._verify(
+                self.sparams, cache_v, ver_toks_dev, starts_dev,
+                jnp.asarray(valids))
+            pool.accept(cache)
+            target = np.asarray(logits)  # (B, C, V) float32
+        self._device_seconds += time.perf_counter() - t_dev
+        self._note_exec("verify", self._verify)
 
         # --- resolve each window on the host (exact rejection sampling)
         emitted_by_slot: dict[int, list[int]] = {}
-        for slot, seq in sched.running.items():
-            req = seq.request
-            k = granted[slot]
-            emitted, accepted = spec_window(
-                draft_toks[slot], target[slot, :k + 1], req.sampling,
-                req.rng_for, base_pos=len(req.output_tokens),
-                q_probs=q_probs[slot])
-            emitted_by_slot[slot] = emitted
-            self._spec_windows += 1
-            self._spec_proposed += k
-            self._spec_accepted += accepted
+        with self.tracer.span("spec.resolve") as sp_res:
+            proposed = accepted_total = 0
+            for slot, seq in sched.running.items():
+                req = seq.request
+                k = granted[slot]
+                emitted, accepted = spec_window(
+                    draft_toks[slot], target[slot, :k + 1], req.sampling,
+                    req.rng_for, base_pos=len(req.output_tokens),
+                    q_probs=q_probs[slot])
+                emitted_by_slot[slot] = emitted
+                self._c_spec_windows.inc()
+                proposed += k
+                accepted_total += accepted
+            self._c_spec_proposed.inc(proposed)
+            self._c_spec_accepted.inc(accepted_total)
+            sp_res.set(proposed=proposed, accepted=accepted_total)
 
         # --- recurrent fix-up: a rejection means the verifier advanced
         # wkv/SSM state through tokens that were never emitted; re-run the
@@ -456,10 +588,13 @@ class ServeEngine:
             if ver_toks_dev.is_deleted():
                 ver_toks_dev, starts_dev = (jnp.asarray(ver_toks),
                                             jnp.asarray(starts))
-            _, cache = self._verify(
-                self.sparams, cache_f, ver_toks_dev, starts_dev,
-                jnp.asarray(valids2))
-            pool.accept(cache)
+            t_dev = time.perf_counter()
+            with self.tracer.span("spec.fixup"):
+                _, cache = self._verify(
+                    self.sparams, cache_f, ver_toks_dev, starts_dev,
+                    jnp.asarray(valids2))
+                pool.accept(cache)
+            self._device_seconds += time.perf_counter() - t_dev
 
         # --- emit (EOS / budget can land mid-window), then restore the
         # host-authoritative lengths: the verifier wrote start + valid
@@ -493,7 +628,7 @@ class ServeEngine:
             req.first_token_time = time.perf_counter()
             req.first_token_step = self._step_idx
         req.output_tokens.append(tok)
-        self._tokens_total += 1
+        self._c_tokens.inc()
         events["tokens"].append((req.request_id, tok))
 
     def _finish(self, req: Request, events: dict) -> None:
@@ -516,45 +651,58 @@ class ServeEngine:
                               else req.finish_time - req.arrival_time),
                 "prefix_cached_tokens": req.prefix_cached_tokens,
             })
-        occ = (self._occupancy_sum / self._decode_steps
-               if self._decode_steps else 0.0)
+        # every aggregate below reads the registry instruments — keys are
+        # byte-compatible with the pre-registry dict, windowed series keep
+        # the exact ``metrics_window`` percentile semantics (Histogram
+        # windows reproduce np.percentile over the last N samples)
+        decode_steps = int(self._c_decode_steps.value)
+        tokens_total = int(self._c_tokens.value)
+        run_seconds = self._c_run_seconds.value
+        occ = (self._c_occ_sum.value / decode_steps
+               if decode_steps else 0.0)
         out = {
             "steps": self._step_idx,
-            "decode_steps": self._decode_steps,
-            "tokens_total": self._tokens_total,
-            "tokens_per_s": (self._tokens_total / self._run_seconds
-                             if self._run_seconds > 0 else 0.0),
+            "decode_steps": decode_steps,
+            "tokens_total": tokens_total,
+            "tokens_per_s": (tokens_total / run_seconds
+                             if run_seconds > 0 else 0.0),
             "mean_occupancy": occ,
             "num_slots": self.pool.num_slots,
             "cache": self.cache_kind,
             "preemptions": self.scheduler.preemptions,
+            "recompiles": int(self._c_recompiles.value),
             "requests": per_request,
         }
-        if self._decode_seconds:
-            ds = np.asarray(self._decode_seconds)
-            out["decode_step_p50_ms"] = float(np.percentile(ds, 50) * 1e3)
-            out["decode_step_p99_ms"] = float(np.percentile(ds, 99) * 1e3)
-            per_tok = [s / t for s, t in zip(self._decode_seconds,
-                                            self._decode_tokens) if t > 0]
-            if per_tok:  # step cost normalized by what the step delivered
-                out["decode_tok_p50_ms"] = float(
-                    np.percentile(per_tok, 50) * 1e3)
+        if self._h_decode.count:
+            out["decode_step_p50_ms"] = self._h_decode.percentile(50) * 1e3
+            out["decode_step_p99_ms"] = self._h_decode.percentile(99) * 1e3
+            # device/host attribution of the same steps (spans carry the
+            # per-step values; these are the windowed medians)
+            out["decode_device_p50_ms"] = self._h_device.percentile(50) * 1e3
+            out["decode_host_p50_ms"] = self._h_host.percentile(50) * 1e3
+            if self._h_decode_tok.count:  # step cost / tokens delivered
+                out["decode_tok_p50_ms"] = (
+                    self._h_decode_tok.percentile(50) * 1e3)
+        if self._h_queue_wait.count:
+            out["queue_wait_p50_ms"] = self._h_queue_wait.percentile(50) * 1e3
         if self.cache_kind == "paged":
             out["mean_block_occupancy"] = (
-                self._block_occupancy_sum / self._decode_steps
-                if self._decode_steps else 0.0)
+                self._c_block_occ_sum.value / decode_steps
+                if decode_steps else 0.0)
             out["block_size"] = self.pool.block_size
             out["num_blocks"] = self.pool.num_blocks
-            out["prefill_launches"] = self._prefill_launches
+            out["prefill_launches"] = int(self._c_prefill_launches.value)
             # windowed (metrics_window-bounded, like the latency deques):
             # hit rate over the last admissions, shared-block gauge mean
-            # over the last decode steps
-            cached = sum(c for c, _ in self._prefix_admit)
-            total = sum(t for _, t in self._prefix_admit)
-            out["prefix_hit_rate"] = cached / total if total else 0.0
-            out["blocks_shared"] = (
-                float(np.mean(self._shared_samples))
-                if self._shared_samples else 0.0)
+            # over the last decode steps.  ``prefix_hit_rate`` is that
+            # *windowed token ratio*; the unambiguous raw lifetime
+            # counters ride alongside as prefix_hits / prefix_lookups
+            total = self._h_admit_total.window_sum()
+            out["prefix_hit_rate"] = (
+                self._h_admit_hit.window_sum() / total if total else 0.0)
+            out["prefix_hits"] = self.pool.prefix_hits
+            out["prefix_lookups"] = self.pool.prefix_lookups
+            out["blocks_shared"] = self._h_shared.window_mean()
             out["prefix_cache"] = {
                 "enabled": self.pool.prefix_cache,
                 "lookups": self.pool.prefix_lookups,
@@ -568,14 +716,16 @@ class ServeEngine:
                 out["kv_bits"] = list(self.pool.kv_bits)
                 out["kv_oracle"] = self.pool.kv_oracle
         if self.spec is not None:
+            windows = int(self._c_spec_windows.value)
+            proposed = int(self._c_spec_proposed.value)
+            accepted = int(self._c_spec_accepted.value)
             out["spec"] = {
                 "k": self.spec.k,
-                "windows": self._spec_windows,
-                "proposed": self._spec_proposed,
-                "accepted": self._spec_accepted,
-                "acceptance_rate": (
-                    self._spec_accepted / self._spec_proposed
-                    if self._spec_proposed else 0.0),
+                "windows": windows,
+                "proposed": proposed,
+                "accepted": accepted,
+                "acceptance_rate": (accepted / proposed
+                                    if proposed else 0.0),
             }
         return out
 

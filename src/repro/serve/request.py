@@ -51,6 +51,10 @@ class Request:
     output_tokens: list[int] = field(default_factory=list)
     # wall-clock metrics (perf_counter seconds)
     arrival_time: float = field(default_factory=time.perf_counter)
+    # when the request last entered the queue: arrival, or the most
+    # recent preempt-requeue — queue-wait observability measures from
+    # here, so a preempted request's second wait is its own sample
+    queued_time: float = field(default_factory=time.perf_counter)
     first_token_time: float | None = None
     finish_time: float | None = None
     # engine-step metrics (deterministic; tests key on these)

@@ -22,6 +22,7 @@ stays a single fixed-shape executable regardless of traffic.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 from repro.serve.queue import AdmissionQueue
@@ -41,7 +42,7 @@ class RunningSeq:
 
 
 class ContinuousScheduler:
-    def __init__(self, pool, queue: AdmissionQueue):
+    def __init__(self, pool, queue: AdmissionQueue, registry=None):
         self.pool = pool
         self.queue = queue
         self.running: dict[int, RunningSeq] = {}  # row -> sequence
@@ -50,6 +51,16 @@ class ContinuousScheduler:
         # prefix-cache hooks; identity no-ops for pools without sharing
         self._cow = getattr(pool, "cow_for_write", lambda *a: True)
         self._record = getattr(pool, "record_token", lambda *a: None)
+        # scheduling-decision counters (repro.obs); a private registry
+        # keeps the instrument calls unconditional
+        if registry is None:
+            from repro.obs import Registry
+            registry = Registry()
+        self._c_admitted = registry.counter("sched.admitted",
+                                            unit="requests")
+        self._c_blocked = registry.counter(
+            "sched.admit_blocked", desc="head-of-line admission stalls")
+        self._c_preempt = registry.counter("sched.preemptions")
 
     # ------------------------------------------------------------------
     @property
@@ -83,12 +94,14 @@ class ContinuousScheduler:
                     req.cache_tokens_needed(),
                     reserve_blocks=len(self.running) + len(admitted),
                     tokens=tokens):
+                self._c_blocked.inc()
                 break
             self.queue.pop()
             seq = self.pool.alloc_seq()
             cached = map_shared(seq, tokens) if map_shared else 0
             ok = self.pool.ensure(seq, req.cache_tokens_needed())
             assert ok, "can_admit promised the blocks"
+            self._c_admitted.inc()
             admitted.append((req, seq, cached))
         return admitted
 
@@ -186,7 +199,9 @@ class ContinuousScheduler:
         req = seq.request
         req.state = RequestState.QUEUED
         req.preemptions += 1
+        req.queued_time = time.perf_counter()  # its next wait starts now
         self.preemptions += 1
+        self._c_preempt.inc()
         self.queue.push_front(req)
         return req
 

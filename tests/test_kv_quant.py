@@ -297,9 +297,9 @@ def test_decode_metrics_buffers_are_bounded(glm4):
     cfg, model, sparams = glm4
     _, eng = _run(model, sparams, cfg, cache="paged", metrics_window=4,
                   gens=(8, 8, 8))
-    assert eng._decode_steps > 4  # ran longer than the window
-    assert len(eng._decode_seconds) == 4
-    assert len(eng._decode_tokens) == 4
+    assert eng._c_decode_steps.value > 4  # ran longer than the window
+    assert len(eng._h_decode.samples()) == 4
+    assert len(eng._h_decode_tok.samples()) == 4
     m = eng.metrics()
     assert m["decode_step_p50_ms"] > 0
 
@@ -309,9 +309,10 @@ def test_decode_metrics_parity_on_short_runs(glm4):
     metrics are computed over the identical full history."""
     cfg, model, sparams = glm4
     _, eng = _run(model, sparams, cfg, cache="paged", gens=(4, 4, 4))
-    assert eng._decode_steps < 512  # default window
-    assert len(eng._decode_seconds) == eng._decode_steps
-    assert len(eng._decode_tokens) == eng._decode_steps
+    steps = int(eng._c_decode_steps.value)
+    assert steps < 512  # default window
+    assert len(eng._h_decode.samples()) == steps
+    assert len(eng._h_decode_tok.samples()) == steps
 
 
 def test_overlength_prompt_rejected_engine_keeps_serving(glm4):
