@@ -82,6 +82,12 @@ share one jit cache per policy; a warmup pass runs before timing.
   the ``prefix_cache=False`` baseline at equal cache bytes — and the
   section's tenant/prompt geometry,
 - ``speculative``: per draft-bitwidth acceptance/speedup medians,
+- ``hotpath``: the one-token-hotpath gate — ``{baseline, hotpath}``
+  best-of tokens/s, ``ratio`` (median per-pair hotpath/baseline, the
+  ``>= 1.15`` assertion), ``pair_ratios``, the attribution split
+  (``decode_host_p50_ms <= 0.25 * decode_step_p50_ms`` asserted on the
+  hotpath engine), pipeline lookahead/bubble counts, and the executable
+  pins (still ONE prefill + ONE decode),
 - ``observability``: ``overhead`` (median enabled/disabled tokens-per-s
   ratio, the ``>= 0.97`` tracing-overhead gate) + ``smoke_trace``
   (event/drop counts, recompiles-after-warmup, span names, device/host
@@ -107,7 +113,7 @@ from repro.models import build_model
 from repro.obs import run_provenance
 from repro.obs.trace import Tracer
 from repro.quant.qat import policy_for
-from repro.serve import ServeEngine
+from repro.serve import SamplingParams, ServeEngine
 from repro.spec import SpecConfig, snap_params_to_grid
 from repro.train.serve import (
     make_chunked_prefill,
@@ -637,6 +643,109 @@ def run_spec(args) -> dict:
     return out
 
 
+def run_hotpath_gate(args) -> dict:
+    """One-token hotpath section: on-device sampling + the lookahead
+    pipeline vs the synchronous host-sampling engine, with two gates.
+
+    Runs on its own wide-vocab cell (``--hotpath-vocab``, smoke glm4
+    body): the host path's per-step cost — the ``(rows, V)`` logits
+    fetch plus a per-row float64 ``warp_probs`` — scales with the vocab
+    while the device step barely does, so this is the regime the
+    tentpole exists for.  The workload samples (temperature 1, nucleus
+    0.9): host sampling is the cost being moved on device, and greedy
+    token parity between the two paths is already pinned in
+    tests/test_sampler_device.py — this section measures throughput.
+    All ``2 * batch == num_slots`` requests are submitted up front with
+    homogeneous budgets, so after admission the queue is empty and the
+    lookahead pipeline runs steady-state.
+
+    Gates (CI fails the build on either):
+
+    - **throughput**: hotpath tokens/s ``>= 1.15x`` the host-sampling
+      baseline — same noise discipline as the paged-vs-slot gate
+      (time-adjacent order-rotated pairs, MEDIAN per-pair ratio over
+      ``--gate-trials`` pairs);
+    - **attribution**: on the hotpath engine ``decode_host_p50_ms <=
+      0.25 * decode_step_p50_ms`` — the Python serving loop stays off
+      the critical path (dispatch counts as device time, so the bound
+      means the same thing on asynchronous and synchronous backends).
+
+    Also asserts the executable pins survive: ONE prefill + ONE decode
+    jit entry after serving both modes (the shared sampler jit is
+    tracked separately by the engine's recompile detector).
+    """
+    vocab = args.hotpath_vocab
+    cfg = replace(get_config("glm4-9b", smoke=True), name="hotpath-cell",
+                  vocab_size=vocab)
+    model = build_model(cfg)
+    sparams = quantize_for_serving(model, model.init(jax.random.PRNGKey(0)),
+                                   policy_for(model, default_bits=8))
+    prefill_fn = make_chunked_prefill(model, donate=False)
+    decode_fn = make_decode_step(model, donate=False)
+    rng = np.random.default_rng(23)
+    n = 2 * args.batch
+    gen = max(args.gen, 48)
+    prompts = [rng.integers(0, vocab, args.prompt_len) for _ in range(n)]
+    max_len = args.prompt_len + gen + 1
+    sampling = SamplingParams(temperature=1.0, top_p=0.9, seed=29)
+
+    def drive(hot):
+        eng = ServeEngine(model, sparams, num_slots=n, max_len=max_len,
+                          cache="paged", block_size=args.block_size,
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_fn=prefill_fn, decode_fn=decode_fn,
+                          sample_device=hot, pipeline=hot)
+        for p in prompts:
+            eng.submit(p, gen + 1, sampling=sampling)
+        return eng.run_until_drained()
+
+    for hot in (False, True):  # warmup: compiles land outside timing
+        drive(hot)
+    best: dict = {}
+    pair_ratios = []
+    for t in range(args.gate_trials):
+        order = (False, True) if t % 2 == 0 else (True, False)
+        pair = {}
+        for hot in order:
+            m = drive(hot)
+            pair[hot] = m["tokens_per_s"]
+            if hot not in best or pair[hot] > best[hot]["tokens_per_s"]:
+                best[hot] = m
+        pair_ratios.append(pair[True] / pair[False])
+    median = sorted(pair_ratios)[len(pair_ratios) // 2]
+    mh = best[True]
+    out = {
+        "cell": {"arch": "glm4-9b", "vocab_size": vocab},
+        # engine modes under test, in launch/serve.py flag terms — so a
+        # regression here is bisectable with the same switches
+        "modes": {"baseline": "--host-sampling --no-pipeline",
+                  "hotpath": "default (device sampling + pipeline)"},
+        "trials": args.gate_trials, "requests": n, "gen": gen,
+        "baseline": round(best[False]["tokens_per_s"], 1),
+        "hotpath": round(mh["tokens_per_s"], 1),
+        "ratio": round(median, 3),
+        "pair_ratios": [round(r, 3) for r in pair_ratios],
+        "decode_step_p50_ms": round(mh["decode_step_p50_ms"], 3),
+        "decode_host_p50_ms": round(mh["decode_host_p50_ms"], 3),
+        "host_fraction_p50": round(mh["decode_host_p50_ms"]
+                                   / mh["decode_step_p50_ms"], 3),
+        "pipeline": mh["pipeline"],
+        "executables": {"prefill": prefill_fn._cache_size(),
+                        "decode": decode_fn._cache_size()},
+    }
+    assert median >= 1.15, (
+        f"hotpath throughput gate: median hotpath/baseline tokens-per-s "
+        f"ratio {median:.3f} < 1.15 — {out}")
+    assert (mh["decode_host_p50_ms"]
+            <= 0.25 * mh["decode_step_p50_ms"]), (
+        f"hotpath attribution gate: decode_host_p50 "
+        f"{mh['decode_host_p50_ms']:.3f} ms > 0.25 x step p50 "
+        f"{mh['decode_step_p50_ms']:.3f} ms — {out}")
+    assert mh["pipeline"]["lookahead_steps"] > 0, out
+    assert out["executables"] == {"prefill": 1, "decode": 1}, out
+    return out
+
+
 def run_obs_gate(model, cfg, args, sparams, trace_path: str | None) -> dict:
     """Observability section: the tracing-overhead gate plus a traced
     multi-tenant speculative smoke run exported as a Chrome-trace file.
@@ -833,7 +942,8 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None,
                  paged_gate: dict | None = None,
                  kv_quant: dict | None = None,
                  multi_tenant: dict | None = None,
-                 observability: dict | None = None) -> dict:
+                 observability: dict | None = None,
+                 hotpath: dict | None = None) -> dict:
     """Persist the per-bitwidth static/continuous/paged tokens/s plus the
     mixed-prompt-length paged section so the perf trajectory is comparable
     across PRs (CI uploads this file as an artifact; humans diff it).
@@ -869,6 +979,8 @@ def write_record(args, rows, path: str, paged_mixed: dict | None = None,
         rec["speculative"] = speculative
     if observability is not None:
         rec["observability"] = observability
+    if hotpath is not None:
+        rec["hotpath"] = hotpath
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -927,6 +1039,13 @@ def main() -> None:
     ap.add_argument("--spec-draft-bits", type=int, nargs="+", default=[2, 4],
                     help="draft bitwidths to sweep (weights snapped to the "
                          "cheapest one's grid)")
+    ap.add_argument("--hotpath", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the one-token-hotpath section (>= 1.15x "
+                         "throughput gate + <= 0.25 host-fraction gate)")
+    ap.add_argument("--hotpath-vocab", type=int, default=4096,
+                    help="hotpath-section cell vocab (host sampling cost "
+                         "scales with it; device step barely does)")
     ap.add_argument("--obs", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="run the observability section (<= 3% tracing-"
@@ -994,6 +1113,17 @@ def main() -> None:
               f"{st['decode_device_p50_ms']:.2f}/"
               f"{st['decode_host_p50_ms']:.2f} ms"
               + (f" -> {st['path']}" if "path" in st else ""), flush=True)
+    hot = None
+    if args.hotpath:
+        hot = run_hotpath_gate(args)
+        print(f"hotpath: {hot['hotpath']:.1f} vs baseline "
+              f"{hot['baseline']:.1f} tok/s "
+              f"(median ratio {hot['ratio']:.3f}x >= 1.15), host p50 "
+              f"{hot['decode_host_p50_ms']:.2f} ms = "
+              f"{hot['host_fraction_p50']:.3f} of step "
+              f"{hot['decode_step_p50_ms']:.2f} ms (<= 0.25), "
+              f"lookahead {hot['pipeline']['lookahead_steps']} / bubbles "
+              f"{hot['pipeline']['bubbles']}, executables 1/1", flush=True)
     spec = None
     if args.spec:
         spec = run_spec(args)
@@ -1010,7 +1140,7 @@ def main() -> None:
     if args.out:
         write_record(args, rows, args.out, paged_mixed=mixed,
                      speculative=spec, paged_gate=gate, kv_quant=kv,
-                     multi_tenant=mt, observability=obs)
+                     multi_tenant=mt, observability=obs, hotpath=hot)
         print(f"wrote {args.out}", flush=True)
 
 

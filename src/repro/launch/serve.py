@@ -29,6 +29,13 @@ scores them against the full-precision policy — output is distribution-
 exact, so every other flag means the same thing with spec on.  Paged
 cache only.
 
+Token selection runs on device by default (``repro.serve.sampler``) with
+a one-step-lookahead decode pipeline hiding the host loop —
+``--host-sampling`` falls back to fetching full logits and sampling in
+Python (the bisectable legacy path), ``--no-pipeline`` keeps device
+sampling but dispatches synchronously; the summary line reports which
+path ran plus the lookahead/bubble counts.
+
 Observability (``repro.obs``): ``--trace out.json`` records the full
 request lifecycle (queue wait, prefill chunks, decode device/host
 split, spec windows, preempt/COW/evict instants) as a Chrome-trace
@@ -114,6 +121,8 @@ def _continuous(args, cfg, model, sparams, policy):
                          num_blocks=args.num_blocks,
                          prefill_chunk=args.prefill_chunk,
                          prefix_cache=args.prefix_cache,
+                         sample_device=not args.host_sampling,
+                         pipeline=not args.no_pipeline,
                          spec=spec, tracer=tracer, **kv_kw)
     mlog = get_logger("serve.metrics")
     rng = np.random.default_rng(1)
@@ -154,6 +163,13 @@ def _continuous(args, cfg, model, sparams, policy):
           + (f" preemptions={m['preemptions']} "
              f"block_occ={m['mean_block_occupancy']:.2f}"
              if args.cache == "paged" else ""))
+    sm, pl = m["sampler"], m["pipeline"]
+    print(f"sampler={'device' if sm['device'] else 'host'} "
+          f"fallbacks={sm['fallbacks']} "
+          f"pipeline={'on' if pl['enabled'] else 'off'} "
+          f"lookahead={pl['lookahead_steps']} bubbles={pl['bubbles']} "
+          f"device/host p50={m['decode_device_p50_ms']:.2f}/"
+          f"{m['decode_host_p50_ms']:.2f} ms")
     if args.cache == "paged":
         pc = m["prefix_cache"]
         print(f"prefix_cache={'on' if pc['enabled'] else 'off'} "
@@ -235,6 +251,15 @@ def main():
     ap.add_argument("--draft-bits", type=int, default=2,
                     help="bitwidth of the self-draft's packed-weight view "
                          "(fewer bitplanes read per draft step)")
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="continuous mode: select tokens on the host from "
+                         "fetched logits (the bisectable legacy path) "
+                         "instead of the on-device fused sampler; implies "
+                         "--no-pipeline")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="continuous mode: disable the one-step-lookahead "
+                         "decode pipeline (synchronous dispatch/fetch "
+                         "every step)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)

@@ -785,12 +785,20 @@ class PagedCachePool:
         int32s per layer step.  A donating backend may consume the cached
         buffer — ``is_deleted`` forces a re-upload then."""
         d = dict(self.cache)
+        d["block_tables"] = self.block_tables_dev()
+        return d
+
+    def block_tables_dev(self):
+        """The dirty-flagged device mirror of ``block_tables``, shared by
+        the decode, verify and fix-up call sites: one upload per table
+        mutation (alloc/free/share/COW set ``_bt_dirty``), not one per
+        step, with an ``is_deleted`` re-upload guard for donating
+        backends that consumed the buffer."""
         if (self._bt_dirty or self._bt_dev is None
                 or self._bt_dev.is_deleted()):
             self._bt_dev = jnp.asarray(self.block_tables)
             self._bt_dirty = False
-        d["block_tables"] = self._bt_dev
-        return d
+        return self._bt_dev
 
     def accept(self, cache: dict) -> None:
         """Take back the (donated-and-returned) cache from a jit call."""

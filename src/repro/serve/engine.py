@@ -49,6 +49,43 @@ spec output is token-identical to non-spec decode; sampled output is
 exactly target-distributed.  EOS / ``max_new_tokens`` can land anywhere
 inside a window (multi-token emission per step).
 
+One-token hotpath (``sample_device=True`` / ``pipeline=True``, both
+default): token selection runs ON DEVICE (``serve/sampler.py``) so each
+decode step fetches a ``(num_slots,) int32`` token vector instead of the
+``(num_slots, V)`` logits matrix, and the sampled vector is itself the
+next step's input — ``last_token`` lives in a device-resident buffer.
+On top of that sits a ONE-STEP-LOOKAHEAD pipeline.  Timeline, one row::
+
+    synchronous (host sampling, pre-PR-9):
+        [dispatch t][--device t--][fetch (B,V)][sample/bookkeep t] ->
+        [dispatch t+1][--device t+1--][fetch][sample/bookkeep t+1] ...
+        host work sits on the critical path every step.
+
+    pipelined (device sampling + lookahead):
+        [dispatch t][dispatch t+1][fetch tokens t][bookkeep t]
+                     (device runs t, then t+1, back to back)
+        step t+1 is dispatched BEFORE step t's tokens are fetched, so
+        the fetch + Python bookkeeping of step t overlap step t+1's
+        device compute.  Steady-state host work is off the critical
+        path; ``decode.device`` (the blocking token fetch) absorbs the
+        wait and ``decode.host`` shrinks toward zero.
+
+    The lookahead only launches when the next step is *composition-
+    stable*: nothing queued to admit, every running request has budget
+    for one more token after this step, and the scheduler can reserve
+    the extra write position without preempting
+    (``scheduler.reserve_lookahead``).  Any other step falls back to
+    the synchronous order and counts ``pipeline.bubbles``.  Arrivals
+    are never delayed by an in-flight step: ``step()`` admits BEFORE
+    syncing it (admission touches only free rows and free blocks), and
+    the composition change just bubbles that step's chain.  A realized
+    EOS inside a lookahead only invalidates that row's phantom token
+    (decode is row-independent): the token is discarded at sync, the
+    phantom KV write at ``cached_len`` lands in a block that is never
+    full (so never published to the prefix trie) and is fully rewritten
+    by the next occupant's prefill before it is read.  Escape hatches:
+    ``--host-sampling`` / ``--no-pipeline`` on ``launch/serve.py``.
+
 Metrics: per-request TTFT (seconds *and* engine steps), wall latency,
 token counts and preemptions, plus aggregate tokens/s, p50/p99 per-step
 decode latency, mean row occupancy, (paged) mean block occupancy, and
@@ -74,6 +111,7 @@ attribute check per call site (<= 3%% tokens/s, gated in
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np
@@ -84,6 +122,7 @@ from repro.quant.policy import QuantPolicy
 from repro.serve.cache import PagedCachePool, SlotCachePool
 from repro.serve.queue import AdmissionQueue
 from repro.serve.request import Request, SamplingParams
+from repro.serve.sampler import row_arrays, sample_rows
 from repro.serve.scheduler import ContinuousScheduler
 from repro.train.serve import (
     make_chunked_prefill,
@@ -91,6 +130,19 @@ from repro.train.serve import (
     make_prefill,
     make_verify_chunk,
 )
+
+
+@dataclass
+class _Inflight:
+    """One dispatched-but-unsynced decode step: the sampled token vector
+    (a ``(num_slots,) int32`` device array, possibly still computing),
+    the emission positions it was sampled at, and a snapshot of the rows
+    it covered (identity-checked at sync — a row that turned over since
+    dispatch carried a phantom token, which is discarded)."""
+
+    tokens: object        # (num_slots,) int32 device array
+    positions: object     # (num_slots,) int32 device array
+    rows: dict            # slot -> RunningSeq at dispatch time
 
 
 class ServeEngine:
@@ -101,7 +153,8 @@ class ServeEngine:
                  decode_fn=None, prefill_fn=None, mesh=None,
                  spec=None, verify_fn=None, kv_bits=None,
                  kv_oracle: bool = False, metrics_window: int = 512,
-                 prefix_cache: bool = True, registry=None, tracer=None):
+                 prefix_cache: bool = True, registry=None, tracer=None,
+                 sample_device: bool = True, pipeline: bool = True):
         if cache not in ("paged", "slot"):
             raise ValueError(f"cache={cache!r} (want 'paged' or 'slot')")
         if (kv_bits is not None or kv_oracle) and cache != "paged":
@@ -150,6 +203,17 @@ class ServeEngine:
                                  "cache='paged'")
             self._verify = verify_fn or make_verify_chunk(model)
             self._draft_sparams = self._resolve_draft(spec)
+        # one-token hotpath: device-side sampling feeds a device-resident
+        # token buffer; the lookahead pipeline additionally dispatches
+        # step t+1 before syncing step t (device sampling only — the
+        # pipeline's whole point is not fetching logits, and spec already
+        # amortizes host work over k+1 tokens per step)
+        self._sample_device = bool(sample_device)
+        self._pipeline_on = bool(pipeline and sample_device
+                                 and spec is None)
+        self._inflight: _Inflight | None = None
+        self._row_sig = None      # batch-composition key for _row_params
+        self._row_dev = None      # cached device sampling-param arrays
         self._next_id = 0
         self._step_idx = 0
         # every aggregate lives on the registry; ``metrics()`` reads the
@@ -195,6 +259,19 @@ class ServeEngine:
         self._c_spec_windows = obs.counter("spec.windows")
         self._c_spec_proposed = obs.counter("spec.proposed", unit="tokens")
         self._c_spec_accepted = obs.counter("spec.accepted", unit="tokens")
+        # hotpath observability: lookahead dispatches vs bubbles (steps
+        # that fell back to the synchronous order while the pipeline was
+        # on), and spec steps that fell back to the full-logits host
+        # resolve because not every window was greedy
+        self._c_lookahead = obs.counter(
+            "pipeline.lookahead", unit="steps",
+            desc="decode steps dispatched before the previous sync")
+        self._c_bubbles = obs.counter(
+            "pipeline.bubbles", unit="steps",
+            desc="pipeline-on steps that ran synchronously")
+        self._c_fallbacks = obs.counter(
+            "sampler.fallbacks", unit="steps",
+            desc="device-sampling steps resolved via host logits fetch")
         # device time inside the current step, accumulated by the decode/
         # spec paths and split out of the step wall time by ``step()``
         self._device_seconds = 0.0
@@ -202,7 +279,8 @@ class ServeEngine:
         # pre-warmed fn starts above zero; only *growth* is an event)
         self._exec_sizes: dict[str, int] = {}
         for kind, fn in (("prefill", self._prefill), ("decode", self._decode),
-                         ("verify", getattr(self, "_verify", None))):
+                         ("verify", getattr(self, "_verify", None)),
+                         ("sample", sample_rows if sample_device else None)):
             size_fn = getattr(fn, "_cache_size", None)
             if size_fn is not None:
                 self._exec_sizes[kind] = size_fn()
@@ -330,8 +408,26 @@ class ServeEngine:
         events = {"admitted": [], "tokens": [], "finished": [],
                   "preempted": []}
 
+        # 0) a lookahead decode dispatched by the PREVIOUS step is this
+        #    step's decode — it is synced below AFTER admissions.  A
+        #    fully-stale inflight (every dispatched row finished at the
+        #    last sync) is dropped without a fetch: its writes went to
+        #    blocks that are rewritten before any read.
+        inf = self._inflight
+        self._inflight = None
+        if inf is not None and not any(
+                self.scheduler.running.get(s) is q
+                for s, q in inf.rows.items()):
+            inf = None
+
         # 1) admit queued requests into free rows (mid-decode is fine:
-        #    running sequences are untouched, their blocks never move)
+        #    running sequences are untouched, their blocks never move.
+        #    An in-flight lookahead is no different — it reads and writes
+        #    only blocks owned by the rows it was dispatched over, never
+        #    the free/cached blocks admission draws from — so arrivals
+        #    since its dispatch are admitted NOW, not one step late;
+        #    _pipeline_tail sees the composition change and bubbles
+        #    instead of chaining the newcomer a garbage feed)
         for req, slot, hit in self.scheduler.admissions():
             wait = time.perf_counter() - req.queued_time
             self._h_queue_wait.observe(wait)
@@ -353,46 +449,28 @@ class ServeEngine:
             if req.done:  # 1-token budget (or instant EOS): row back now
                 self._finish(self.scheduler.finish(slot), events)
 
-        # 2) reserve next-token blocks; exhaustion preempts youngest
-        #    (spec mode reserves per-window inside _spec_step instead)
-        if self.cache_kind == "paged" and self.spec is None:
-            for req in self.scheduler.reserve_for_decode():
-                events["preempted"].append(req.request_id)
-                tr.instant("preempt", request=req.request_id,
-                           step=self._step_idx)
+        if inf is not None:
+            # 2/3 pipelined) the in-flight lookahead IS this step's
+            #    decode: its write positions were reserved at dispatch,
+            #    so no reserve_for_decode — chain-or-bubble, then sync
+            self._timed_decode(
+                events, tr, lambda ev: self._pipeline_tail(inf, ev),
+                mode="pipelined")
+        else:
+            # 2) reserve next-token blocks; exhaustion preempts youngest
+            #    (spec mode reserves per-window inside _spec_step instead)
+            if self.cache_kind == "paged" and self.spec is None:
+                for req in self.scheduler.reserve_for_decode():
+                    events["preempted"].append(req.request_id)
+                    tr.instant("preempt", request=req.request_id,
+                               step=self._step_idx)
 
-        # 3) one packed decode step (or speculative window) over every
-        #    running row
-        if self.scheduler.running:
-            self._c_occ_sum.inc(self.pool.occupancy())
-            if self.cache_kind == "paged":
-                self._c_block_occ_sum.inc(self.pool.block_occupancy())
-                if self.pool.prefix_cache:
-                    self._h_shared.observe(self.pool.blocks_shared)
-            self._c_decode_steps.inc()
-            self._device_seconds = 0.0
-            t_dec = time.perf_counter()
-            n_tok = len(events["tokens"])
-            with tr.span("decode.step", step=self._step_idx,
-                         rows=len(self.scheduler.running),
-                         mode="spec" if self.spec is not None
-                         else "decode") as sp:
-                if self.spec is not None:
-                    self._spec_step(events)
-                else:
-                    self._decode_once(events)
-                emitted = len(events["tokens"]) - n_tok
-                sp.set(tokens=emitted)
-            dt = time.perf_counter() - t_dec
-            self._h_decode.observe(dt)
-            if emitted > 0:  # every live path emits >= 1/row; see metrics()
-                self._h_decode_tok.observe(dt / emitted)
-            # device/host attribution: the decode/spec path accumulates
-            # jit-dispatch + logits-fetch time into _device_seconds; the
-            # remainder of the step body is host overhead (sampling,
-            # bookkeeping, table uploads) — the ~3x PR 5 found hid here
-            self._h_device.observe(self._device_seconds)
-            self._h_host.observe(max(dt - self._device_seconds, 0.0))
+            # 3) one packed decode step (or speculative window) over every
+            #    running row
+            if self.scheduler.running:
+                self._timed_decode(events, tr, self._sync_body,
+                                   mode="spec" if self.spec is not None
+                                   else "decode")
 
         self._step_idx += 1
         self._g_queue.set(len(self.queue))
@@ -400,8 +478,175 @@ class ServeEngine:
         self._c_run_seconds.inc(time.perf_counter() - t0)
         return events
 
+    def _timed_decode(self, events: dict, tr, body, mode: str) -> None:
+        """Run one decode body under the ``decode.step`` span with the
+        occupancy counters and the device/host wall-time split.
+        Attribution (documented in docs/metrics.md): ``_device_seconds``
+        is time spent DRIVING OR AWAITING the device — jit dispatch
+        (``decode.dispatch`` span; a near-zero enqueue on async backends,
+        the compute itself on synchronous ones) plus the blocking
+        token-vector fetch (``decode.device`` span) — and
+        ``decode.host`` is the rest of the step wall time: the Python
+        serving loop (sampling on the legacy path, emit/advance
+        bookkeeping, table uploads).  The pipelined loop times dispatch
+        and sync separately, so the next step's dispatch is never folded
+        into the current step's fetch wait."""
+        self._c_occ_sum.inc(self.pool.occupancy())
+        if self.cache_kind == "paged":
+            self._c_block_occ_sum.inc(self.pool.block_occupancy())
+            if self.pool.prefix_cache:
+                self._h_shared.observe(self.pool.blocks_shared)
+        self._c_decode_steps.inc()
+        self._device_seconds = 0.0
+        t_dec = time.perf_counter()
+        n_tok = len(events["tokens"])
+        with tr.span("decode.step", step=self._step_idx,
+                     rows=len(self.scheduler.running), mode=mode) as sp:
+            body(events)
+            emitted = len(events["tokens"]) - n_tok
+            sp.set(tokens=emitted)
+        dt = time.perf_counter() - t_dec
+        self._h_decode.observe(dt)
+        if emitted > 0:  # an all-stale sync can emit 0; see metrics()
+            self._h_decode_tok.observe(dt / emitted)
+        self._h_device.observe(self._device_seconds)
+        self._h_host.observe(max(dt - self._device_seconds, 0.0))
+
+    def _sync_body(self, events: dict) -> None:
+        """Decode body for a step with no pipelined predecessor."""
+        if self.spec is not None:
+            self._spec_step(events)
+        elif self._sample_device:
+            self._pipeline_tail(self._dispatch_decode(), events)
+        else:
+            self._decode_once(events)
+
+    # ------------------------------------------------------ device hotpath
+    def _row_params(self):
+        """Device-resident per-row sampling parameters, re-uploaded only
+        when the batch composition changes (slot -> request mapping)."""
+        sched = self.scheduler
+        sig = tuple(sorted((s, q.request.request_id)
+                           for s, q in sched.running.items()))
+        if sig != self._row_sig:
+            arrs = row_arrays(self.pool.num_slots,
+                              ((s, q.request)
+                               for s, q in sched.running.items()))
+            self._row_dev = tuple(jnp.asarray(a) for a in arrs)
+            self._row_sig = sig
+        return self._row_dev
+
+    def _dispatch_decode(self, toks_dev=None, positions=None) -> _Inflight:
+        """Dispatch one packed decode + fused on-device sampling WITHOUT
+        blocking: the returned handle's ``tokens`` is a ``(num_slots,)``
+        int32 device array that may still be computing.  The synchronous
+        head builds the feed from host ``last_token``s; a chained
+        (lookahead) dispatch feeds the previous step's device token
+        vector straight back in — zero host round-trip."""
+        sched = self.scheduler
+        if toks_dev is None:
+            toks = np.zeros((self.pool.num_slots, 1), np.int32)
+            pos = np.zeros((self.pool.num_slots,), np.int32)
+            for slot, seq in sched.running.items():
+                toks[slot, 0] = seq.last_token
+                pos[slot] = len(seq.request.output_tokens)
+            toks_dev, positions = jnp.asarray(toks), jnp.asarray(pos)
+        t_dev = time.perf_counter()
+        with self.tracer.span("decode.dispatch", rows=len(sched.running)):
+            logits, cache = self._decode(
+                self.sparams, self.pool.step_cache(), toks_dev)
+            self.pool.accept(cache)
+            tokens = sample_rows(logits[:, -1], *self._row_params(),
+                                 positions)
+        # dispatch counts as device time: on an async backend it is a
+        # near-zero enqueue, on a synchronous one (CPU) it IS the compute
+        # — either way it is time driving the device, not serving-loop
+        # Python (see _timed_decode for the full attribution schema)
+        self._device_seconds += time.perf_counter() - t_dev
+        self._note_exec("decode", self._decode)
+        self._note_exec("sample", sample_rows)
+        return _Inflight(tokens, positions, dict(sched.running))
+
+    def _sync_inflight(self, inf: _Inflight, events: dict) -> None:
+        """Block on the in-flight token vector, then emit/advance.  Rows
+        whose sequence turned over since dispatch (finished at the last
+        sync while the lookahead was already running) carried a phantom
+        token, which is discarded here."""
+        t_dev = time.perf_counter()
+        with self.tracer.span("decode.device", rows=len(inf.rows)):
+            toks = np.asarray(inf.tokens)  # blocks until compute lands
+        self._device_seconds += time.perf_counter() - t_dev
+        with self.tracer.span("decode.host"):
+            for slot, seq in inf.rows.items():
+                if self.scheduler.running.get(slot) is not seq:
+                    continue
+                tok = int(toks[slot])
+                self._emit(seq.request, tok, events)
+                if seq.request.done:
+                    self._finish(self.scheduler.finish(slot), events)
+                else:
+                    self.scheduler.advance(slot, tok)
+
+    def _pipeline_tail(self, inf: _Inflight, events: dict) -> None:
+        """Dispatch the NEXT step's decode (when safe) BEFORE syncing the
+        current one — the blocking fetch + Python bookkeeping below then
+        overlap the device's next step.  Ineligible steps fall back to
+        plain sync order and count ``pipeline.bubbles``.
+
+        Chaining feeds ``inf.tokens`` back in for EVERY slot, so it is
+        only valid while the running composition is exactly the rows the
+        in-flight step was dispatched over — a row admitted since (step()
+        admits before this sync) has no token in that vector and must
+        wait for the next synchronous head."""
+        nxt = None
+        same_rows = (len(self.scheduler.running) == len(inf.rows) and all(
+            inf.rows.get(s) is q for s, q in self.scheduler.running.items()))
+        if self._pipeline_on:
+            if same_rows and self._lookahead_ok():
+                nxt = self._dispatch_decode(inf.tokens[:, None],
+                                            inf.positions + 1)
+                self._c_lookahead.inc()
+            else:
+                self._c_bubbles.inc()
+        self._sync_inflight(inf, events)
+        self._inflight = nxt
+
+    def _lookahead_ok(self) -> bool:
+        """Can step t+1 be dispatched before step t's tokens land?
+        Requires: nothing queued to admit, every running request with
+        budget for at least one more token after this step (an EOS can
+        still land — that row's phantom token is discarded at sync), and
+        a non-preempting reservation of the t+1 write position."""
+        if len(self.queue):
+            return False
+        for seq in self.scheduler.running.values():
+            req = seq.request
+            if len(req.output_tokens) + 2 > req.max_new_tokens:
+                return False
+        return self.scheduler.reserve_lookahead()
+
+    def _decode_sync(self, events: dict) -> None:
+        """One synchronous decode step, no lookahead (the spec path's
+        ``max_k == 0`` fallback).  Device sampling only when every row is
+        greedy — there device and host draws are bitwise-identical, so the
+        fallback composes with spec windows.  Any sampled row must draw
+        from the HOST streams (``Request.rng_for``): window size depends
+        on pool pressure i.e. batch composition, and a ``k == 0`` window
+        emitting from the device threefry stream while a ``k > 0`` window
+        emits the same position from the numpy stream would break the
+        windowing-invariance contract."""
+        if self._sample_device and all(
+                seq.request.sampling.temperature <= 0.0
+                for seq in self.scheduler.running.values()):
+            self._sync_inflight(self._dispatch_decode(), events)
+        else:
+            self._decode_once(events)
+
     def _decode_once(self, events: dict) -> None:
-        """One packed single-token decode over every running row."""
+        """One packed single-token decode over every running row, host
+        sampling (``sample_device=False`` — the bisectable legacy path).
+        Here ``_device_seconds`` keeps the pre-pipeline semantics:
+        dispatch + the blocking (num_slots, V) logits fetch."""
         toks = np.zeros((self.pool.num_slots, 1), np.int32)
         for slot, seq in self.scheduler.running.items():
             toks[slot, 0] = seq.last_token
@@ -440,8 +685,23 @@ class ServeEngine:
         same executable).  ``length`` is host-authoritative and rewritten
         after emission, so rejected positions' stale KV sits beyond every
         attention mask until genuinely overwritten.
+
+        Greedy fast path (``sample_device`` and every running request at
+        temperature 0 — the parity-critical default): the draft roll
+        keeps its token argmaxes on device, and verify/resolve fetches
+        only the ``(B, C)`` target-argmax and ``(B, max_k)`` draft
+        vectors instead of the ``(B, C, V)`` logits tensor; each window
+        resolves with :func:`repro.spec.sampler.greedy_window`
+        (bitwise-equal to ``spec_window`` for greedy).  Mixed or sampled
+        batches keep the exact rejection sampler on the full logits and
+        count ``sampler.fallbacks``.
         """
-        from repro.spec.sampler import KIND_DRAFT, draft_token, spec_window
+        from repro.spec.sampler import (
+            KIND_DRAFT,
+            draft_token,
+            greedy_window,
+            spec_window,
+        )
 
         pool, sched, spec = self.pool, self.scheduler, self.spec
         B = pool.num_slots
@@ -469,8 +729,13 @@ class ServeEngine:
             return
         max_k = max(granted.values())
         if max_k == 0:
-            self._decode_once(events)  # nothing to speculate this step
+            self._decode_sync(events)  # nothing to speculate this step
             return
+        greedy_fast = (self._sample_device and
+                       all(seq.request.sampling.temperature <= 0.0
+                           for seq in sched.running.values()))
+        if self._sample_device and not greedy_fast:
+            self._c_fallbacks.inc()
 
         lengths0 = {s: seq.cached_len for s, seq in sched.running.items()}
         # snapshot O(1) recurrent leaves (explicit copies: the decode and
@@ -485,26 +750,54 @@ class ServeEngine:
         cur = np.zeros((B, 1), np.int32)
         for slot, seq in sched.running.items():
             cur[slot, 0] = seq.last_token
+        # greedy-fast roll state: the fed token never leaves the device,
+        # and the per-depth draft columns accumulate for ONE batched
+        # fetch after the verify dispatch
+        if greedy_fast:
+            granted_arr = np.zeros((B,), np.int32)
+            for slot, k in granted.items():
+                granted_arr[slot] = k
+            granted_dev = jnp.asarray(granted_arr)
+            cur_dev = first_dev = jnp.asarray(cur)
+        draft_cols: list = []
         # masked tables are nested (grants only expire as depth grows), so
         # upload one device array per DISTINCT mask, not one per depth —
-        # in the common all-rows-full-window case that is a single upload
+        # and the common all-rows-full-window mask IS the pool's mirror,
+        # already resident
         bt_key, bt_dev = None, None
         with self.tracer.span("spec.draft", max_k=max_k,
                               rows=len(sched.running)):
             for depth in range(1, max_k + 1):
                 cache_d = dict(pool.cache)
                 bt = pool.block_tables.copy()
+                masked = False
                 for slot in range(B):
                     if granted.get(slot, 0) < depth:
                         bt[slot] = 0  # garbage sink: row sits this one out
+                        masked = masked or pool.block_tables[slot].any()
                 key = bt.tobytes()
                 # re-upload if the mask changed OR a donating backend ate
                 # the previous buffer (CPU ignores donation; accelerators
                 # don't)
                 if key != bt_key or bt_dev.is_deleted():
-                    bt_key, bt_dev = key, jnp.asarray(bt)
+                    bt_key = key
+                    bt_dev = (jnp.asarray(bt) if masked
+                              else pool.block_tables_dev())
                 cache_d["block_tables"] = bt_dev
                 t_dev = time.perf_counter()
+                if greedy_fast:
+                    # greedy draft == argmax, taken on device — no fetch;
+                    # rows past their window carry their last token
+                    logits, cache = self._decode(self._draft_sparams,
+                                                 cache_d, cur_dev)
+                    pool.accept(cache)
+                    nxt = jnp.argmax(logits[:, -1], axis=-1)
+                    col = jnp.where(granted_dev >= depth,
+                                    nxt.astype(jnp.int32), cur_dev[:, 0])
+                    cur_dev = col[:, None]
+                    draft_cols.append(col)
+                    self._device_seconds += time.perf_counter() - t_dev
+                    continue
                 logits, cache = self._decode(self._draft_sparams, cache_d,
                                              jnp.asarray(cur))
                 pool.accept(cache)
@@ -532,15 +825,26 @@ class ServeEngine:
         for slot, seq in sched.running.items():
             k = granted[slot]
             ver_toks[slot, 0] = seq.last_token
-            ver_toks[slot, 1:1 + k] = draft_toks[slot]
+            if not greedy_fast:
+                ver_toks[slot, 1:1 + k] = draft_toks[slot]
             starts[slot] = lengths0[slot]
             valids[slot] = k + 1
-        bt_full = jnp.asarray(pool.block_tables)  # shared with the fix-up
+        if greedy_fast:
+            # the feed stays on device: [last, draft_1..draft_max_k],
+            # padded to the fixed verify width (the tail beyond a row's
+            # window is masked by ``valids`` — its values are never read)
+            body = jnp.concatenate(
+                [first_dev] + [c[:, None] for c in draft_cols], axis=1)
+            ver_toks_dev = jnp.pad(body, ((0, 0), (0, C - body.shape[1])))
+        else:
+            ver_toks_dev = jnp.asarray(ver_toks)
+        bt_full = pool.block_tables_dev()  # mirror, shared with the fix-up
         cache_v = dict(pool.cache)
         for key in snap_keys:  # keep `snap` alive for a possible fix-up
             cache_v[key] = jnp.copy(snap[key])
         cache_v["block_tables"] = bt_full
-        ver_toks_dev, starts_dev = jnp.asarray(ver_toks), jnp.asarray(starts)
+        starts_dev = jnp.asarray(starts)
+        target = tops = drafts = None
         t_dev = time.perf_counter()
         with self.tracer.span("spec.verify", rows=len(sched.running),
                               width=C):
@@ -548,21 +852,35 @@ class ServeEngine:
                 self.sparams, cache_v, ver_toks_dev, starts_dev,
                 jnp.asarray(valids))
             pool.accept(cache)
-            target = np.asarray(logits)  # (B, C, V) float32
+            if greedy_fast:
+                # fetch per-position target argmaxes + the draft columns
+                # — (B, C) + (B, max_k) int32, not (B, C, V) float32
+                tops = np.asarray(jnp.argmax(logits, axis=-1)
+                                  .astype(jnp.int32))
+                drafts = np.asarray(jnp.stack(draft_cols, axis=1))
+                ver_toks[:, 1:1 + max_k] = drafts  # host copy for fix-up
+            else:
+                target = np.asarray(logits)  # (B, C, V) float32
         self._device_seconds += time.perf_counter() - t_dev
         self._note_exec("verify", self._verify)
 
-        # --- resolve each window on the host (exact rejection sampling)
+        # --- resolve each window on the host: greedy argmax comparison
+        # on the fast path, exact rejection sampling otherwise
         emitted_by_slot: dict[int, list[int]] = {}
         with self.tracer.span("spec.resolve") as sp_res:
             proposed = accepted_total = 0
             for slot, seq in sched.running.items():
                 req = seq.request
                 k = granted[slot]
-                emitted, accepted = spec_window(
-                    draft_toks[slot], target[slot, :k + 1], req.sampling,
-                    req.rng_for, base_pos=len(req.output_tokens),
-                    q_probs=q_probs[slot])
+                if greedy_fast:
+                    emitted, accepted = greedy_window(drafts[slot, :k],
+                                                      tops[slot])
+                else:
+                    emitted, accepted = spec_window(
+                        draft_toks[slot], target[slot, :k + 1],
+                        req.sampling, req.rng_for,
+                        base_pos=len(req.output_tokens),
+                        q_probs=q_probs[slot])
                 emitted_by_slot[slot] = emitted
                 self._c_spec_windows.inc()
                 proposed += k
@@ -582,9 +900,9 @@ class ServeEngine:
             cache_f = dict(pool.cache)
             for key in snap_keys:
                 cache_f[key] = snap[key]
-            # a donating verify consumed the first call's inputs
-            cache_f["block_tables"] = (jnp.asarray(pool.block_tables)
-                                       if bt_full.is_deleted() else bt_full)
+            # the mirror re-uploads itself if a donating verify consumed
+            # the buffer (CPU ignores donation; accelerators don't)
+            cache_f["block_tables"] = pool.block_tables_dev()
             if ver_toks_dev.is_deleted():
                 ver_toks_dev, starts_dev = (jnp.asarray(ver_toks),
                                             jnp.asarray(starts))
@@ -672,6 +990,20 @@ class ServeEngine:
             "preemptions": self.scheduler.preemptions,
             "recompiles": int(self._c_recompiles.value),
             "requests": per_request,
+            # one-token hotpath counters (docs/metrics.md): lookahead =
+            # steps whose decode was dispatched before the previous sync;
+            # bubbles = pipeline-on steps that ran synchronously;
+            # fallbacks = device-sampling steps resolved via a host
+            # logits fetch (non-greedy speculative windows)
+            "sampler": {
+                "device": self._sample_device,
+                "fallbacks": int(self._c_fallbacks.value),
+            },
+            "pipeline": {
+                "enabled": self._pipeline_on,
+                "lookahead_steps": int(self._c_lookahead.value),
+                "bubbles": int(self._c_bubbles.value),
+            },
         }
         if self._h_decode.count:
             out["decode_step_p50_ms"] = self._h_decode.percentile(50) * 1e3

@@ -121,13 +121,51 @@ class Request:
                             self.rng_for(len(self.output_tokens)))
 
 
+def _nucleus_mask(p: np.ndarray, top_p: float) -> np.ndarray:
+    """Boolean keep-mask for the smallest stable-sorted prefix of ``p``
+    whose mass reaches ``top_p`` — WITHOUT sorting the whole vocab.
+
+    ``np.argpartition`` pulls the top-``m`` candidates in O(V); every
+    element >= the m-th value joins the candidate set (ties included, so
+    the set is closed under the stable order), and a stable sort of just
+    the candidates reproduces the global stable prefix exactly — same
+    comparison keys, same original-index tie-breaking, same sequential
+    ``cumsum`` partial sums, hence a bitwise-identical mask (regression-
+    gated against the full-sort reference in tests/test_sampler_device).
+    ``m`` doubles until the candidate mass covers ``top_p``; flat
+    distributions degrade to one full sort, peaked ones (the serving
+    common case) stop at m = 64."""
+    v = p.size
+    m = 64
+    while m < v:
+        top_idx = np.argpartition(-p, m - 1)[:m]
+        thresh = p[top_idx].min()
+        cand = np.nonzero(p >= thresh)[0]  # tie-complete candidate set
+        cand = cand[np.argsort(-p[cand], kind="stable")]
+        csum = np.cumsum(p[cand])
+        if csum[-1] >= top_p:
+            cut = int(np.searchsorted(csum, top_p) + 1)
+            mask = np.zeros(v, bool)
+            mask[cand[:cut]] = True
+            return mask
+        m *= 2
+    order = np.argsort(-p, kind="stable")
+    csum = np.cumsum(p[order])
+    cut = int(np.searchsorted(csum, top_p) + 1)
+    mask = np.zeros(v, bool)
+    mask[order[:cut]] = True
+    return mask
+
+
 def warp_probs(logits: np.ndarray,
                sampling: SamplingParams) -> np.ndarray | None:
     """Logits -> the warped sampling distribution (V,) float64, or ``None``
     for greedy (temperature 0).  Temperature, then top-k, then nucleus —
     the single definition shared by baseline decode and the speculative
     rejection sampler (which must warp draft and target *identically* for
-    the accept ratio p/q to be meaningful)."""
+    the accept ratio p/q to be meaningful).  Both truncations use partial
+    selection (``np.partition`` / ``np.argpartition``), not a full vocab
+    sort — this runs per row per step on the host oracle path."""
     logits = np.asarray(logits, np.float64).reshape(-1)
     if sampling.temperature <= 0.0:
         return None
@@ -141,12 +179,7 @@ def warp_probs(logits: np.ndarray,
     if sampling.top_p < 1.0:
         # nucleus: keep the smallest probability-sorted prefix whose mass
         # reaches top_p (the top token always survives), renormalize
-        order = np.argsort(-p, kind="stable")
-        csum = np.cumsum(p[order])
-        cut = int(np.searchsorted(csum, sampling.top_p) + 1)
-        mask = np.zeros_like(p, bool)
-        mask[order[:cut]] = True
-        p = np.where(mask, p, 0.0)
+        p = np.where(_nucleus_mask(p, sampling.top_p), p, 0.0)
         p /= p.sum()
     return p
 

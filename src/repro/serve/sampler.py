@@ -1,0 +1,161 @@
+"""On-device fused sampling for the serve hotpath.
+
+The host sampling oracle (``request.select_token``) forces every decode
+step to fetch a full ``(num_slots, V)`` logits matrix, cast it to
+float64, and loop over rows in Python — on the measured PR 8 traces that
+host tail is the largest single cost in the decode step.  This module
+moves the whole selection onto the device as ONE jitted call so the
+engine fetches a ``(num_slots,) int32`` token vector instead:
+
+- **greedy** (``temperature <= 0``, the parity-critical default) is
+  ``jnp.argmax`` over the logits row.  The host oracle argmaxes the same
+  row after an ``np.float64`` cast; the cast is monotone and injective,
+  and both argmaxes break ties toward the first index, so the device
+  token is *bitwise identical* to ``Request.select_token`` (gated in
+  tests/test_sampler_device.py across all model families).
+- **temperature / top-k / top-p** mirror ``request.warp_probs``: divide
+  by temperature, mask below the k-th largest logit, softmax, keep the
+  nucleus whose mass reaches ``top_p``, then draw by inverse CDF.  Both
+  truncations are SORT-FREE: XLA's CPU sort costs milliseconds per
+  ``(rows, V)`` batch — an order of magnitude more than the entire rest
+  of the step — so the k-th order statistic and the nucleus probability
+  cut are found by 32-step bisection over the *uint32 sortable key*
+  space (IEEE floats bitcast to integers compare consistently), which is
+  exact, O(V) per step, and branch-free.  Tie semantics at the cut are
+  *tie-complete*: every token equal to the threshold survives — same as
+  the host's top-k rule; the host nucleus cuts mid-tie in stable order
+  instead, a measure-zero difference that only shows on exactly-tied
+  probabilities.  The draw consumes one uniform from a *threefry* stream
+  keyed by folding (seed, request_id, position, kind) into a
+  ``jax.random`` key — the device-side analogue of the host path's
+  ``SeedSequence((seed, request_id, position, kind))`` Philox stream.
+  The value drawn at a position is a pure function of the request
+  identity, so device sampling is batch-composition- and
+  pipeline-invariant exactly like the host path (hypothesis-gated).
+  The two streams are *different* PRNGs, so sampled (not greedy) tokens
+  differ draw-for-draw from host sampling while remaining exactly
+  distributed per the warped probabilities (chi-square gated).
+
+Inactive rows (slot not running) carry ``temperature = 0`` in the packed
+parameter arrays and reduce to a cheap argmax — no NaNs, no branches.
+
+``sample_rows`` is a module-level jit shared by every engine in the
+process (like the pool's splice/COW helpers), so a warmed executable
+serves all engines and per-engine recompile detection sees zero growth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# draw-kind namespace shared with repro.spec.sampler: the baseline token
+# draw is kind 0 there too, so one (request, position) never reuses a
+# stream across the plain and speculative paths
+KIND_TOKEN = 0
+
+
+def _stream_key(seed, rid, position):
+    """Per-(request, position, kind) threefry key: fold the identity into
+    the seed one field at a time (order matters and is part of the stream
+    schema — documented in docs/metrics.md)."""
+    key = jax.random.PRNGKey(seed)
+    key = jax.random.fold_in(key, rid)
+    key = jax.random.fold_in(key, position)
+    return jax.random.fold_in(key, KIND_TOKEN)
+
+
+def _sort_key(x):
+    """float32 -> uint32 key with the float's ordering (IEEE totally
+    ordered under the sign-flip bitcast trick; -inf lowest)."""
+    b = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return jnp.where(b >> 31 == 1, ~b, b | jnp.uint32(0x80000000))
+
+
+def _bisect_threshold(keys, good):
+    """Largest uint32 ``t`` with ``good(count-or-mass of keys >= t)``
+    still true, by 32-step integer bisection — ``good`` must be monotone
+    non-increasing in ``t`` and true at ``t = 0``.  Exact: the key space
+    is integral, so 32 halvings pin the threshold bit-for-bit."""
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2 + (hi - lo) % 2  # upper mid, no overflow
+        ok = good(keys >= mid)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+    lo, _ = jax.lax.fori_loop(
+        0, 32, body, (jnp.uint32(0), jnp.uint32(0xFFFFFFFF)))
+    return lo
+
+
+def _sample_row(logits, temp, top_k, top_p, seed, rid, position):
+    """One row: (V,) logits -> int32 token."""
+    v = logits.shape[-1]
+    f = logits.astype(jnp.float32)
+    # greedy: argmax with first-index tie-breaking == host oracle
+    greedy = jnp.argmax(f).astype(jnp.int32)
+
+    # warped distribution (f32 mirror of request.warp_probs; temp <= 0
+    # rows compute it with t = 1 purely to stay finite — the final
+    # select ignores the result)
+    t = jnp.where(temp > 0.0, temp, jnp.float32(1.0))
+    z = f / t
+    # top-k: keep everything >= the k-th largest (tie-complete, the host
+    # rule); the order statistic comes from key bisection, not a sort.
+    # top_k == 0 disables by degenerating to k = V (threshold = min)
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    zkeys = _sort_key(z)
+    kth = _bisect_threshold(zkeys, lambda m: m.sum() >= k)
+    z = jnp.where(zkeys < kth, -jnp.inf, z)
+    z = z - z.max()
+    p = jnp.exp(z)
+    p = p / p.sum()
+    # top-p nucleus: the highest probability cut whose tail mass still
+    # reaches top_p (tie-complete at the cut; ties aside this keeps the
+    # same set as the host's stable-sorted prefix).  Bisection again —
+    # the target is relative to the realized f32 total, so top_p = 1.0
+    # keeps everything even when the float sum lands just under 1
+    pkeys = _sort_key(p)
+    target = top_p * p.sum()
+    pcut = _bisect_threshold(
+        pkeys, lambda m: jnp.where(m, p, 0.0).sum() >= target)
+    p = jnp.where((top_p < 1.0) & (pkeys < pcut), 0.0, p)
+    # inverse-CDF draw from the per-(request, position, kind) stream;
+    # scaling u by the total mass keeps the draw in range under f32
+    # cumsum error, and side="right" skips zero-probability tokens
+    u = jax.random.uniform(_stream_key(seed, rid, position),
+                           dtype=jnp.float32)
+    cdf = jnp.cumsum(p)
+    drawn = jnp.searchsorted(cdf, u * cdf[-1], side="right")
+    drawn = jnp.clip(drawn, 0, v - 1).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, drawn)
+
+
+_sample_rows_impl = jax.vmap(_sample_row, in_axes=(0, 0, 0, 0, 0, 0, 0))
+
+# ONE executable for any traffic mix: every argument is data, the only
+# shape is (num_slots, V) / (num_slots,) — engines share this jit like
+# they share decode_fn, so the executable-count pins stay 1 prefill +
+# 1 decode (+ this sampler, tracked separately by _note_exec)
+sample_rows = jax.jit(_sample_rows_impl)
+
+
+def row_arrays(num_slots: int, rows) -> tuple[np.ndarray, ...]:
+    """Pack per-row sampling parameters for ``sample_rows``.
+
+    ``rows`` yields ``(slot, request)`` pairs for the running sequences;
+    idle slots default to greedy (temperature 0) so their lanes stay
+    NaN-free and cheap.  The engine uploads the result once per batch
+    composition, not per step."""
+    temps = np.zeros((num_slots,), np.float32)
+    top_ks = np.zeros((num_slots,), np.int32)
+    top_ps = np.ones((num_slots,), np.float32)
+    seeds = np.zeros((num_slots,), np.uint32)
+    rids = np.zeros((num_slots,), np.int32)
+    for slot, req in rows:
+        s = req.sampling
+        temps[slot] = s.temperature
+        top_ks[slot] = s.top_k
+        top_ps[slot] = s.top_p
+        seeds[slot] = np.uint32(s.seed & 0xFFFFFFFF)
+        rids[slot] = req.request_id
+    return temps, top_ks, top_ps, seeds, rids

@@ -143,6 +143,24 @@ class ContinuousScheduler:
                     break
         return preempted
 
+    def reserve_lookahead(self) -> bool:
+        """Non-preempting reservation ONE decode step beyond the last
+        reserved write: blocks for ``cached_len + 2`` tokens and private
+        ownership of position ``cached_len + 1`` for every running
+        sequence.  Used by the engine's one-step-lookahead pipeline,
+        which falls back to the synchronous path (a ``pipeline.bubbles``
+        count) whenever the extra step cannot be covered without
+        preempting.  Partial grants are kept: the blocks are needed
+        within two steps anyway and are freed by preempt/finish like any
+        others, so the progress guarantee is unchanged."""
+        for slot in sorted(self.running,
+                           key=lambda s: self.running[s].order):
+            seq = self.running[slot]
+            if not (self.pool.ensure(slot, seq.cached_len + 2)
+                    and self._cow(slot, seq.cached_len + 1)):
+                return False
+        return True
+
     def reserve_for_spec(self, want: dict[int, int]
                          ) -> tuple[dict[int, int], list[Request]]:
         """Reserve ``cached_len + k + 1`` tokens of cache per running row

@@ -49,6 +49,32 @@ def draft_token(logits: np.ndarray, sampling: SamplingParams,
     return int(rng.choice(q.size, p=q)), q
 
 
+def greedy_window(draft_tokens, target_tops) -> tuple[list[int], int]:
+    """Resolve one all-greedy window from PRE-COMPUTED target argmaxes;
+    -> (emitted tokens, num accepted).
+
+    Equivalent to :func:`spec_window` when every request in the batch is
+    greedy (pinned in tests/test_sampler_device.py) — but it only needs the
+    verifier's ``(k + 1,)`` int32 argmax row, not the ``(k + 1, V)``
+    logits, which is what lets the engine's device-sampling fast path
+    fetch accepted-token vectors instead of the full logits tensor.
+    ``target_tops[j]`` must be the argmax of the target's position-``j``
+    logits row (computed on device with the same first-index
+    tie-breaking as the host oracle)."""
+    emitted: list[int] = []
+    accepted = 0
+    for j, d in enumerate(draft_tokens):
+        top = int(target_tops[j])
+        if int(d) == top:
+            emitted.append(top)
+            accepted += 1
+            continue
+        emitted.append(top)
+        return emitted, accepted
+    emitted.append(int(target_tops[len(draft_tokens)]))
+    return emitted, accepted
+
+
 def spec_window(draft_tokens, target_logits, sampling: SamplingParams,
                 rng_for, *, base_pos: int,
                 q_probs=None) -> tuple[list[int], int]:

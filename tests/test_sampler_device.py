@@ -1,0 +1,392 @@
+"""One-token hotpath gates: on-device fused sampling + the pipelined
+decode loop.
+
+- Greedy device sampling is BITWISE-identical to the host oracle
+  (``Request.select_token``) across all three model families, under
+  preemption, with quantized KV, and through speculative windows.
+- Sampled draws (temperature > 0, top-p < 1) are exactly distributed per
+  the host-warped probabilities (chi-square gate) and are deterministic,
+  batch-composition-invariant, and pipeline-invariant (hypothesis).
+- ``warp_probs``'s argpartition nucleus path is bitwise-equal to the
+  full-sort reference, ties included.
+- ``greedy_window`` (the spec fast path's resolver) equals
+  ``spec_window`` for greedy windows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: skip ONLY property tests
+    import types
+
+    st = types.SimpleNamespace(integers=lambda *a, **k: None,
+                               lists=lambda *a, **k: None,
+                               floats=lambda *a, **k: None,
+                               sampled_from=lambda *a, **k: None)
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.quant.qat import policy_for
+from repro.serve import SamplingParams, ServeEngine
+from repro.serve.request import Request, warp_probs
+from repro.serve.sampler import row_arrays, sample_rows
+from repro.spec import SpecConfig
+from repro.spec.sampler import greedy_window, spec_window
+from repro.train.serve import (
+    make_chunked_prefill,
+    make_decode_step,
+    make_verify_chunk,
+    quantize_for_serving,
+)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _served(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    sparams = quantize_for_serving(model, model.init(RNG),
+                                   policy_for(model, default_bits=4))
+    return cfg, model, sparams
+
+
+@pytest.fixture(scope="module")
+def glm4():
+    cfg, model, sparams = _served("glm4-9b")
+    fns = {"prefill_fn": make_chunked_prefill(model, donate=False),
+           "decode_fn": make_decode_step(model, donate=False)}
+    return cfg, model, sparams, fns
+
+
+def _prompt(cfg, n, seed):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,), 0,
+                                         cfg.vocab_size))
+
+
+def _serve(model, sparams, prompts, gens, **kw):
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 4)
+    eng = ServeEngine(model, sparams, cache="paged", **kw)
+    rids = [eng.submit(p, max_new_tokens=g,
+                       sampling=kw.get("_sampling") or SamplingParams())
+            for p, g in zip(prompts, gens)]
+    eng.run_until_drained()
+    return [eng.output(r) for r in rids], eng
+
+
+# ------------------------------------------------- device sampler unit level
+def _draw_device(logits, sampling, request_id=0, position=0):
+    """One device draw through the packed-row entry point."""
+    B = 1
+    req = Request(request_id, [1], 8, sampling)
+    arrs = row_arrays(B, [(0, req)])
+    out = sample_rows(jnp.asarray(logits[None, :]),
+                      *map(jnp.asarray, arrs),
+                      jnp.asarray(np.array([position], np.int32)))
+    return int(np.asarray(out)[0])
+
+
+def test_device_greedy_bitwise_equals_host_oracle():
+    """Including exact-tie rows: both sides must break toward the first
+    index after the same monotone cast."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        row = rng.normal(size=(97,)).astype(np.float32)
+        if trial % 3 == 0:  # manufacture ties at the max
+            m = row.max()
+            row[rng.integers(0, 97, size=3)] = m
+        req = Request(trial, [1], 8, SamplingParams())
+        assert _draw_device(row, SamplingParams(), trial) == \
+            req.select_token(row)
+
+
+def test_device_sampling_chi_square_exact():
+    """temperature > 0 / top-p < 1: device draws across many positions
+    must match the HOST-warped distribution (the single definition in
+    request.warp_probs) by chi-square."""
+    sp = SamplingParams(temperature=1.0, top_k=0, top_p=0.8, seed=11)
+    rng = np.random.default_rng(7)
+    row = (rng.normal(size=(12,)) * 1.5).astype(np.float32)
+    p = warp_probs(row, sp)
+    N = 4000
+    req = Request(3, [1], 8, sp)
+    arrs = row_arrays(N, [(i, req) for i in range(N)])
+    draws = np.asarray(sample_rows(
+        jnp.asarray(np.broadcast_to(row, (N, row.size)).copy()),
+        *map(jnp.asarray, arrs),
+        jnp.asarray(np.arange(N, dtype=np.int32))))
+    counts = np.bincount(draws, minlength=row.size)
+    live = p > 1e-12
+    assert counts[~live].sum() == 0, "drew a nucleus-masked token"
+    exp = p[live] * N
+    chi2 = float(((counts[live] - exp) ** 2 / exp).sum())
+    # df = live-1; p=0.001 critical value for df<=11 is < 31.3
+    assert chi2 < 31.3, (chi2, counts, p)
+
+
+def test_device_sampling_deterministic_and_position_keyed():
+    sp = SamplingParams(temperature=0.9, top_k=6, seed=5)
+    rng = np.random.default_rng(1)
+    row = rng.normal(size=(33,)).astype(np.float32)
+    a = _draw_device(row, sp, request_id=2, position=4)
+    b = _draw_device(row, sp, request_id=2, position=4)
+    assert a == b
+    # the stream is keyed by (seed, request, position): over many
+    # positions/requests the draws cannot all collapse to one value
+    alts = {_draw_device(row, sp, request_id=r, position=pos)
+            for r in range(4) for pos in range(16)}
+    assert len(alts) > 1
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5),
+       st.integers(0, 6), st.integers(0, 40))
+@settings(max_examples=25, deadline=None)
+def test_device_stream_batch_composition_invariant(seed, nrows, slot,
+                                                   position):
+    """Hypothesis: the token drawn for a request depends only on its own
+    (logits, sampling params, position) — not on which slot it occupies
+    or who shares the batch.  This is the property that makes device
+    sampling safe under preemption/re-admission AND under the lookahead
+    pipeline (whose chained dispatches reuse the same per-position
+    streams)."""
+    rng = np.random.default_rng(seed)
+    V = 29
+    slot = slot % nrows
+    sp = SamplingParams(temperature=0.7 + (seed % 5) * 0.1,
+                        top_k=int(seed % 7), top_p=0.9, seed=seed % 997)
+    req = Request(int(seed % 1009), [1], 8, sp)
+    row = rng.normal(size=(V,)).astype(np.float32)
+    # batch A: the request alone in slot 0
+    arrs_a = row_arrays(1, [(0, req)])
+    tok_a = np.asarray(sample_rows(
+        jnp.asarray(row[None, :]), *map(jnp.asarray, arrs_a),
+        jnp.asarray(np.array([position], np.int32))))[0]
+    # batch B: same request in `slot` among nrows random companions
+    comps = [Request(2000 + i, [1], 8,
+                     SamplingParams(temperature=1.0, seed=i))
+             for i in range(nrows)]
+    pairs = [(i, comps[i]) for i in range(nrows) if i != slot]
+    pairs.append((slot, req))
+    logits_b = rng.normal(size=(nrows, V)).astype(np.float32)
+    logits_b[slot] = row
+    positions = rng.integers(0, 50, size=nrows).astype(np.int32)
+    positions[slot] = position
+    arrs_b = row_arrays(nrows, pairs)
+    tok_b = np.asarray(sample_rows(
+        jnp.asarray(logits_b), *map(jnp.asarray, arrs_b),
+        jnp.asarray(positions)))[slot]
+    assert int(tok_a) == int(tok_b)
+
+
+# ------------------------------------------------------ warp_probs satellite
+def _warp_probs_fullsort(logits, sampling):
+    """The pre-PR-9 reference: full stable vocab sort in the nucleus."""
+    logits = np.asarray(logits, np.float64).reshape(-1)
+    if sampling.temperature <= 0.0:
+        return None
+    z = logits / sampling.temperature
+    if sampling.top_k:
+        kth = np.partition(z, -sampling.top_k)[-sampling.top_k]
+        z = np.where(z < kth, -np.inf, z)
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    if sampling.top_p < 1.0:
+        order = np.argsort(-p, kind="stable")
+        csum = np.cumsum(p[order])
+        cut = int(np.searchsorted(csum, sampling.top_p) + 1)
+        mask = np.zeros_like(p, bool)
+        mask[order[:cut]] = True
+        p = np.where(mask, p, 0.0)
+        p /= p.sum()
+    return p
+
+
+@pytest.mark.parametrize("top_p", [0.05, 0.5, 0.9, 0.999])
+@pytest.mark.parametrize("shape", ["peaked", "flat", "ties"])
+def test_warp_probs_partial_selection_bitwise(top_p, shape):
+    """The argpartition nucleus must reproduce the full-sort warp
+    BITWISE — including heavy ties (stable original-index ordering) and
+    flat distributions (the doubling loop's worst case), and for vocabs
+    on both sides of the 64-candidate seed."""
+    rng = np.random.default_rng(42)
+    for V in (17, 63, 64, 65, 500, 4096):
+        if shape == "peaked":
+            logits = (rng.normal(size=V) * 4).astype(np.float64)
+        elif shape == "flat":
+            logits = np.zeros(V) + rng.normal(size=V) * 1e-9
+        else:
+            logits = np.round(rng.normal(size=V) * 2)  # many exact ties
+        sp = SamplingParams(temperature=0.8, top_p=top_p, seed=0)
+        got = warp_probs(logits, sp)
+        want = _warp_probs_fullsort(logits, sp)
+        assert np.array_equal(got, want), (V, shape, top_p)
+        # and the downstream draw is unchanged for the same stream
+        req = Request(1, [1], 4, sp)
+        r1 = req.rng_for(0)
+        r2 = req.rng_for(0)
+        assert int(r1.choice(got.size, p=got)) == \
+            int(r2.choice(want.size, p=want))
+
+
+def test_warp_probs_top_k_still_partial_and_exact():
+    rng = np.random.default_rng(3)
+    logits = rng.normal(size=300)
+    sp = SamplingParams(temperature=1.0, top_k=10, top_p=0.7, seed=0)
+    got = warp_probs(logits, sp)
+    want = _warp_probs_fullsort(logits, sp)
+    assert np.array_equal(got, want)
+    assert np.count_nonzero(got) <= 10
+
+
+# ------------------------------------------------------- greedy_window unit
+def test_greedy_window_equals_spec_window():
+    rng = np.random.default_rng(9)
+    sp = SamplingParams()  # greedy
+    for _ in range(30):
+        k = int(rng.integers(0, 5))
+        V = 19
+        target = rng.normal(size=(k + 1, V)).astype(np.float32)
+        tops = np.argmax(np.asarray(target, np.float64), axis=-1)
+        # mix of agreeing and disagreeing drafts
+        drafts = [int(tops[j]) if rng.random() < 0.6
+                  else int(rng.integers(0, V)) for j in range(k)]
+        req = Request(0, [1], 64, sp)
+        want = spec_window(drafts, target, sp, req.rng_for, base_pos=0)
+        got = greedy_window(drafts, tops)
+        assert got == want
+
+
+# ----------------------------------------------------- engine-level parity
+@pytest.mark.parametrize("arch", ["glm4-9b", "hymba-1.5b", "rwkv6-1.6b"])
+def test_device_vs_host_greedy_parity_all_families(arch):
+    cfg, model, sparams = _served(arch)
+    prompts = [_prompt(cfg, 3 + 2 * s, seed=s) for s in (1, 2, 3)]
+    gens = [4, 5, 6]
+    want, _ = _serve(model, sparams, prompts, gens,
+                     sample_device=False, pipeline=False)
+    got, eng = _serve(model, sparams, prompts, gens)
+    assert got == want
+    m = eng.metrics()
+    assert m["pipeline"]["enabled"]
+    assert m["sampler"]["device"] and m["sampler"]["fallbacks"] == 0
+
+
+def test_device_parity_under_preemption(glm4):
+    """A pool too small for all rows forces preempt-and-requeue; replay
+    + device greedy must still match the host path token-for-token."""
+    cfg, model, sparams, fns = glm4
+    # shared prompt: the prefix trie makes admission cheap for all three,
+    # then decode growth (3 -> 5 blocks each) outruns the 11-block pool —
+    # same geometry as test_prefix_cache's preemption gate
+    P = _prompt(cfg, 8, seed=40)
+    prompts = [P, P, P]
+    gens = [12, 12, 12]
+    kw = dict(num_blocks=11, num_slots=3, max_len=20, **fns)
+    want, weng = _serve(model, sparams, prompts, gens,
+                        sample_device=False, pipeline=False, **kw)
+    got, eng = _serve(model, sparams, prompts, gens, **kw)
+    assert got == want
+    assert eng.scheduler.preemptions > 0  # the scenario actually bites
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_device_parity_quantized_kv(glm4, kv_bits):
+    cfg, model, sparams, fns = glm4
+    prompts = [_prompt(cfg, 5, seed=60 + s) for s in range(2)]
+    kw = dict(kv_bits=kv_bits, num_slots=2, **fns)
+    want, _ = _serve(model, sparams, prompts, [6, 6],
+                     sample_device=False, pipeline=False, **kw)
+    got, _ = _serve(model, sparams, prompts, [6, 6], **kw)
+    assert got == want
+
+
+def test_device_parity_through_spec_windows(glm4):
+    """Greedy spec with the accepted-token-vector fast path must equal
+    both the host-sampling spec engine and plain non-spec decode."""
+    cfg, model, sparams, fns = glm4
+    verify_fn = make_verify_chunk(model, donate=False)
+    prompts = [_prompt(cfg, 5, seed=70 + s) for s in range(2)]
+    gens = [8, 8]
+    spec = SpecConfig(k=3, draft_bits=4)
+    kw = dict(num_slots=2, spec=spec, verify_fn=verify_fn, **fns)
+    want, _ = _serve(model, sparams, prompts, gens,
+                     sample_device=False, pipeline=False, **kw)
+    got, eng = _serve(model, sparams, prompts, gens, **kw)
+    plain, _ = _serve(model, sparams, prompts, gens, **fns,
+                      num_slots=2)
+    assert got == want == plain
+    m = eng.metrics()
+    assert m["sampler"]["fallbacks"] == 0  # all-greedy -> fast path
+    assert m["spec"]["accepted"] > 0
+
+
+def test_pipeline_invariant_and_counters(glm4):
+    """pipeline=True vs pipeline=False (both device sampling) must be
+    token-identical — the lookahead only moves WHEN work is dispatched —
+    and the bubble/lookahead counters must cover every pipeline-on
+    decode step."""
+    cfg, model, sparams, fns = glm4
+    prompts = [_prompt(cfg, 4, seed=80 + s) for s in range(3)]
+    gens = [9, 9, 9]
+    base, _ = _serve(model, sparams, prompts, gens, pipeline=False, **fns)
+    piped, eng = _serve(model, sparams, prompts, gens, **fns)
+    assert piped == base
+    m = eng.metrics()
+    assert m["pipeline"]["lookahead_steps"] > 0  # steady state engaged
+    # every decode step in a pipeline-on engine either synced a
+    # lookahead or counted a bubble (spec/none excluded by construction)
+    assert (m["pipeline"]["lookahead_steps"] + m["pipeline"]["bubbles"]
+            == m["decode_steps"])
+
+
+def test_pipeline_invariant_sampled_stream(glm4):
+    """temperature > 0: the device threefry stream is position-keyed, so
+    pipelined and synchronous runs draw identical tokens."""
+    cfg, model, sparams, fns = glm4
+    sp = SamplingParams(temperature=0.9, top_p=0.9, seed=123)
+    prompts = [_prompt(cfg, 4, seed=90 + s) for s in range(2)]
+
+    def run(pipeline):
+        eng = ServeEngine(model, sparams, cache="paged", num_slots=2,
+                          max_len=32, block_size=4, prefill_chunk=4,
+                          pipeline=pipeline, **fns)
+        rids = [eng.submit(p, max_new_tokens=7, sampling=sp)
+                for p in prompts]
+        eng.run_until_drained()
+        return [eng.output(r) for r in rids]
+
+    assert run(True) == run(False)
+
+
+def test_mid_run_submission_breaks_pipeline_cleanly(glm4):
+    """A request arriving while the loop is pipelining must be admitted
+    (within two steps: the inflight syncs, then admission runs) and the
+    final outputs must match a fully synchronous run."""
+    cfg, model, sparams, fns = glm4
+
+    def run(pipeline):
+        eng = ServeEngine(model, sparams, cache="paged", num_slots=3,
+                          max_len=32, block_size=4, prefill_chunk=4,
+                          pipeline=pipeline, **fns)
+        r0 = eng.submit(_prompt(cfg, 4, seed=7), max_new_tokens=10)
+        outs = {}
+        for i in range(6):
+            eng.step()
+        r1 = eng.submit(_prompt(cfg, 5, seed=8), max_new_tokens=6)
+        eng.run_until_drained()
+        outs[0], outs[1] = eng.output(r0), eng.output(r1)
+        return outs
+
+    assert run(True) == run(False)
